@@ -1,0 +1,2 @@
+"""repro: Stripe (Nested Polyhedral Model) tensor compiler + multi-pod JAX
+training/serving framework.  See README.md / DESIGN.md."""

@@ -1,0 +1,31 @@
+"""Stripe: the paper's contribution — a nested-polyhedral tensor IR with a
+config-driven optimization pass pipeline and jnp/Pallas backends."""
+from .affine import Affine, aff
+from .poly import Constraint, Index, Polyhedron
+from .ir import (
+    AGG_IDENTITY,
+    AGG_OPS,
+    Block,
+    Constant,
+    Intrinsic,
+    Load,
+    Location,
+    Program,
+    RefDir,
+    Refinement,
+    Special,
+    Store,
+    TensorDecl,
+)
+from .frontend import TileProgram, single_op_program
+from .interp import execute_reference
+from .lower_jnp import lower_block_jnp, lower_program_jnp
+from .validate import validate_program
+
+__all__ = [
+    "Affine", "aff", "Constraint", "Index", "Polyhedron",
+    "AGG_IDENTITY", "AGG_OPS", "Block", "Constant", "Intrinsic", "Load",
+    "Location", "Program", "RefDir", "Refinement", "Special", "Store",
+    "TensorDecl", "TileProgram", "single_op_program", "execute_reference",
+    "lower_block_jnp", "lower_program_jnp", "validate_program",
+]

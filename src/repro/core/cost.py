@@ -1,0 +1,251 @@
+"""Cost models for autotiling (paper §3.3, Fig. 4).
+
+Two models, selected by the hardware config:
+
+* ``cache_lines`` — the paper's model, verbatim: *number of cache lines
+  accessed divided by the number of multiply-accumulate operations
+  performed*.  Overflow elements still cost lines; constrained-out points
+  do not count as MACs.
+* ``roofline`` — the TPU generalization: per-tile HBM traffic and MXU
+  compute are converted to seconds and the dominant term is minimized
+  (Williams et al. roofline, which §3.3 cites as the autotiler's target).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from .affine import Affine
+from .hwconfig import HardwareConfig
+from .ir import Block, RefDir, Refinement, dtype_bytes
+from .poly import Polyhedron, ceil_div
+
+
+@dataclasses.dataclass
+class TileCost:
+    cost: float
+    lines: float = 0.0
+    macs: float = 0.0
+    bytes_hbm: float = 0.0
+    t_mem: float = 0.0
+    t_compute: float = 0.0
+    mem_elems: int = 0
+    mem_bytes: int = 0
+    n_tiles: int = 1
+    feasible: bool = True
+    why: str = ""
+
+
+def _contig_dim(ref: Refinement) -> int:
+    if not ref.strides:
+        return ref.rank - 1
+    best = min(range(ref.rank), key=lambda d: abs(ref.strides[d]) or 10**9)
+    return best
+
+
+def lines_for_view(shape: Tuple[int, ...], ref: Refinement, line: int, aligned: bool) -> int:
+    """Cache lines touched by one tile-view of ``ref``."""
+    cd = _contig_dim(ref)
+    n = 1
+    for d, ext in enumerate(shape):
+        if d != cd:
+            n *= ext
+    ext = shape[cd]
+    if aligned:
+        per_row = ceil_div(ext, line)
+    else:
+        # worst-case unaligned: a run of ext elements can straddle one extra line
+        per_row = ceil_div(ext + line - 1, line)
+    return n * per_row
+
+
+def _tile_view_shapes(block: Block, tiles: Mapping[str, int]) -> List[Tuple[Refinement, Tuple[int, ...], bool, bool]]:
+    """For each refinement of a flat block: (ref, tile view shape, is_tiled,
+    aligned_in_contig_dim)."""
+    free = {i.name: i.range for i in block.idxs if not i.is_passthrough()}
+    eff = {v: min(tiles.get(v, free[v]), free[v]) for v in free}
+    out = []
+    for r in block.refs:
+        shape = []
+        uses_tiled_var = False
+        for e, orig in zip(r.offsets, r.shape):
+            span = 0
+            for n, c in e.terms:
+                if n in eff:
+                    span += abs(c) * (eff[n] - 1)
+                    if eff[n] < free[n]:
+                        uses_tiled_var = True
+            shape.append(span + orig)
+        # alignment of the contiguous dim: the outer-step in that dim must be
+        # a multiple of the line; conservatively aligned iff the tile covers
+        # the full contiguous dim or starts at offsets that are multiples.
+        cd = _contig_dim(r)
+        e = r.offsets[cd]
+        full = all(eff.get(n, 1) >= free.get(n, 1) for n in e.names())
+        out.append((r, tuple(shape), uses_tiled_var, full))
+    return out
+
+
+_MACS_CACHE: Dict[int, Optional[int]] = {}
+
+
+def count_macs_exact(block: Block, limit: int = 2_000_000) -> Optional[int]:
+    key = id(block)
+    if key in _MACS_CACHE:
+        return _MACS_CACHE[key]
+    poly = block.poly
+    if poly.rect_size() > limit:
+        out = None
+    else:
+        out = poly.count()
+    _MACS_CACHE[key] = out
+    return out
+
+
+def block_points(block: Block) -> int:
+    """Total leaf iteration points (rect) including nested sub-blocks —
+    the MAC count proxy for fused/nested structures."""
+    rect = 1
+    for i in block.idxs:
+        if not i.is_passthrough():
+            rect *= i.range
+    subs = [s for s in block.stmts if isinstance(s, Block)]
+    if not subs:
+        return rect
+    return rect * sum(block_points(s) for s in subs)
+
+
+def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, params: Mapping) -> TileCost:
+    """Cost of tiling a flat contraction/elementwise block by ``tiles``."""
+    free = {i.name: i.range for i in block.idxs if not i.is_passthrough()}
+    eff = {v: min(tiles.get(v, free[v]), free[v]) for v in free}
+    n_tiles = 1
+    for v, r in free.items():
+        n_tiles *= ceil_div(r, eff[v])
+
+    views = _tile_view_shapes(block, eff)
+    inner_mem = hw.inner_mem()
+    line = hw.mem_units[0].cache_line_elems
+    count_untiled = params.get("count_untiled", True)
+
+    # ---- memory footprint of one tile -------------------------------------
+    mem_elems = 0
+    mem_bytes = 0
+    any_tiled = any(uses for _, _, uses, _ in views)
+    for r, shape, uses_tiled, _ in views:
+        elems = 1
+        for s in shape:
+            elems *= s
+        # when nothing is tiled (flat candidate) every view IS the tile
+        if count_untiled or uses_tiled or not any_tiled:
+            mem_elems += elems
+            mem_bytes += elems * dtype_bytes(r.dtype)
+
+    cap_e = params.get("mem_cap_elems")
+    cap_frac = params.get("mem_cap_frac")
+    feasible = True
+    why = ""
+    if cap_e is not None and mem_elems > cap_e:
+        feasible, why = False, f"tile footprint {mem_elems}e > cap {cap_e}e"
+    if cap_frac is not None and mem_bytes * 2 > inner_mem.size_bytes * cap_frac:
+        feasible, why = False, f"2x tile bytes {2*mem_bytes} > {cap_frac} of {inner_mem.name}"
+
+    # ---- MACs --------------------------------------------------------------
+    macs = block_points(block)
+    if params.get("exact_macs"):
+        exact = count_macs_exact(block)
+        if exact is not None and not any(isinstance(s, Block) for s in block.stmts):
+            macs = exact
+
+    model = params.get("cost", "cache_lines")
+    if model == "cache_lines":
+        lines = 0
+        for r, shape, uses_tiled, aligned in views:
+            if not count_untiled and not uses_tiled:
+                continue
+            lines += lines_for_view(shape, r, line, aligned)
+        total_lines = n_tiles * lines
+        cost = total_lines / max(macs, 1)
+        return TileCost(cost=cost, lines=total_lines, macs=macs, mem_elems=mem_elems,
+                        mem_bytes=mem_bytes, n_tiles=n_tiles, feasible=feasible, why=why)
+
+    # ---- roofline model ----------------------------------------------------
+    # HBM traffic with *consecutive* reuse, matching the Pallas emission:
+    # the grid iterates parallel (output) dims outer, reduction dims inner;
+    # a ref's block stays resident only while the innermost grid dims that
+    # vary do not address it (BlockSpec revisiting).  The output block is
+    # revisited across the whole reduction (scratch accumulation).
+    out_vars: List[str] = []
+    for r, *_ in views:
+        if r.dir in (RefDir.OUT, RefDir.INOUT):
+            for e in r.offsets:
+                for n in e.names():
+                    if n not in out_vars:
+                        out_vars.append(n)
+    grid_dims = [v for v in free if eff[v] < free[v]]
+    # order: parallel first, reduction innermost (lower_pallas.grid_order)
+    grid_order = [v for v in grid_dims if v in out_vars] + [v for v in grid_dims if v not in out_vars]
+    steps = {v: ceil_div(free[v], eff[v]) for v in grid_dims}
+    total_steps = 1
+    for v in grid_dims:
+        total_steps *= steps[v]
+
+    bytes_hbm = 0.0
+    for r, shape, _uses, _al in views:
+        elems = 1
+        for s in shape:
+            elems *= s
+        ref_vars = set()
+        for e in r.offsets:
+            ref_vars.update(n for n in e.names() if n in steps)
+        reuse = 1
+        for v in reversed(grid_order):
+            if v in ref_vars:
+                break
+            reuse *= steps[v]
+        fetches = max(total_steps // max(reuse, 1), 1)
+        factor = 2 if r.dir == RefDir.INOUT else 1
+        bytes_hbm += fetches * elems * dtype_bytes(r.dtype) * factor
+    t_mem = bytes_hbm / hw.mem_units[0].bandwidth
+
+    # compute term with stencil-padding utilization
+    flops = 2.0 * macs
+    util = 1.0
+    stencil = None
+    for s in hw.stencils:
+        if s.name == params.get("stencil", "mxu"):
+            stencil = s
+            break
+    if stencil is not None and "contraction" in block.tags:
+        dims = _classify_mnk(block, eff)
+        for extent, mult in zip(dims, stencil.dims):
+            if extent is None:
+                continue
+            padded = ceil_div(extent, mult) * mult
+            util *= extent / padded
+    t_compute = flops / (hw.peak_flops * max(util, 1e-6))
+    cost = max(t_mem, t_compute) + 1e-12 * n_tiles
+    return TileCost(cost=cost, macs=macs, bytes_hbm=bytes_hbm, t_mem=t_mem,
+                    t_compute=t_compute, mem_elems=mem_elems, mem_bytes=mem_bytes,
+                    n_tiles=n_tiles, feasible=feasible, why=why)
+
+
+def _classify_mnk(block: Block, eff: Mapping[str, int]):
+    """(m, n, k) tile extents for stencil utilization: n = output contiguous
+    var, k = largest reduction var, m = product of remaining output vars."""
+    out_ref = None
+    for r in block.refs:
+        if r.dir in (RefDir.OUT, RefDir.INOUT):
+            out_ref = r
+    if out_ref is None:
+        return (None, None, None)
+    out_vars = [e.terms[0][0] for e in out_ref.offsets if len(e.terms) == 1]
+    if not out_vars:
+        return (None, None, None)
+    n_var = out_vars[-1]
+    red = [v for v in eff if v not in out_vars]
+    k = max((eff[v] for v in red), default=None)
+    m = 1
+    for v in out_vars[:-1]:
+        m *= eff[v]
+    return (m if out_vars[:-1] else None, eff[n_var], k)

@@ -1,0 +1,141 @@
+"""Hardware configuration — the paper's ``create_stripe_config`` /
+``set_config_params`` (Fig. 1).
+
+A ``HardwareConfig`` is the *only* hardware-specific artifact in the
+compiler: a description of the memory hierarchy, compute stencils, and a
+parameterized list of optimization passes.  Operations (the frontend) never
+reference it; passes are generic and read their parameters from here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryUnit:
+    name: str
+    size_bytes: int
+    bandwidth: float  # bytes/s to the next-outer level
+    cache_line_elems: int = 1  # transaction granularity, in elements
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeStencil:
+    """A hardware compute unit needing exact tile multiples (paper:
+    'Microarchitectural Stenciling')."""
+
+    name: str  # e.g. "mxu", "vpu"
+    # (parallel_out0, parallel_out1, reduction) multiples for contractions
+    dims: Tuple[int, int, int]
+    flops: float  # peak FLOP/s when fed at this stencil
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareConfig:
+    name: str
+    mem_units: Tuple[MemoryUnit, ...]  # outermost -> innermost
+    stencils: Tuple[ComputeStencil, ...] = ()
+    peak_flops: float = 0.0
+    # roofline link terms (framework-level; chips in a pod slice)
+    ici_link_bw: float = 0.0
+    # pass pipeline: (pass_name, params) applied in order
+    passes: Tuple[Tuple[str, Dict], ...] = ()
+
+    def mem(self, name: str) -> MemoryUnit:
+        for m in self.mem_units:
+            if m.name == name:
+                return m
+        raise KeyError(name)
+
+    def inner_mem(self) -> MemoryUnit:
+        return self.mem_units[1] if len(self.mem_units) > 1 else self.mem_units[0]
+
+    def with_params(self, **overrides) -> "HardwareConfig":
+        """The paper's ``set_config_params``: per-HW-version tweak of pass
+        parameters without rewriting the config."""
+        new_passes = []
+        for name, params in self.passes:
+            p = dict(params)
+            for k, v in overrides.items():
+                pref = name + "."
+                if k.startswith(pref):
+                    p[k[len(pref):]] = v
+            new_passes.append((name, p))
+        return dataclasses.replace(self, passes=tuple(new_passes))
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e (the deployment target of this framework)
+# ---------------------------------------------------------------------------
+TPU_V5E = HardwareConfig(
+    name="tpu_v5e",
+    mem_units=(
+        MemoryUnit("HBM", 16 * 2**30, 819e9, cache_line_elems=128),
+        # VMEM: ~128 MiB; budget half for double-buffering headroom
+        MemoryUnit("VMEM", 128 * 2**20, 2.7e12, cache_line_elems=128),
+        MemoryUnit("VREG", 32 * 2**10, 1e14, cache_line_elems=8),
+    ),
+    stencils=(
+        ComputeStencil("mxu", (128, 128, 128), 197e12),  # bf16 systolic
+        ComputeStencil("vpu", (8, 128, 1), 4e12),
+    ),
+    peak_flops=197e12,
+    ici_link_bw=50e9,
+    passes=(
+        ("fuse", {}),
+        ("autotile", {
+            "cost": "roofline",
+            "search": "pow2",
+            "mem_cap_frac": 0.45,   # of VMEM; leaves room for double buffering
+            "count_untiled": True,
+        }),
+        ("stencil", {"stencil": "mxu", "min_dim": 16}),
+        ("boundary", {"mode": "remainder"}),
+        ("localize", {"inner": "VMEM"}),
+        ("schedule", {"unit": "VMEM"}),
+    ),
+)
+
+# ---------------------------------------------------------------------------
+# The paper's Fig. 4 cost-model machine: a generic cached architecture with
+# an 8-element cache line and a 512-element tile budget.
+# ---------------------------------------------------------------------------
+PAPER_FIG4 = HardwareConfig(
+    name="paper_fig4",
+    mem_units=(
+        MemoryUnit("DRAM", 1 << 40, 100e9, cache_line_elems=8),
+        MemoryUnit("CACHE", 512, 1e12, cache_line_elems=8),  # 512 *elements*
+    ),
+    peak_flops=1e12,
+    passes=(
+        ("autotile", {
+            "cost": "cache_lines",
+            "search": "divisors",
+            "mem_cap_elems": 512,
+            "count_untiled": False,  # Fig 4 excludes the (untiled) weights
+            "exact_macs": True,
+        }),
+    ),
+)
+
+# A host-CPU config used by tests: small tiles, no stencils.
+CPU_TEST = HardwareConfig(
+    name="cpu_test",
+    mem_units=(
+        MemoryUnit("RAM", 1 << 40, 50e9, cache_line_elems=16),
+        MemoryUnit("L2", 1 << 20, 500e9, cache_line_elems=16),
+    ),
+    peak_flops=1e11,
+    passes=(
+        ("fuse", {}),
+        ("autotile", {"cost": "cache_lines", "search": "pow2", "mem_cap_elems": 4096}),
+        ("boundary", {"mode": "remainder"}),
+        ("localize", {"inner": "L2"}),
+        ("schedule", {"unit": "L2"}),
+    ),
+)
+
+REGISTRY: Dict[str, HardwareConfig] = {
+    c.name: c for c in (TPU_V5E, PAPER_FIG4, CPU_TEST)
+}

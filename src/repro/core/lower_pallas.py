@@ -1,0 +1,314 @@
+"""Pallas backend: lower optimized (tiled/stenciled/fused) Stripe blocks to
+``pl.pallas_call`` with explicit ``BlockSpec`` VMEM tiling.
+
+TPU adaptation of Stripe's hardware lowering (see DESIGN.md): Stripe's
+refinement-with-location (explicit DMA between memory units) maps to the
+declarative BlockSpec (block shape + index_map); the optimization passes
+*choose* the BlockSpec parameters:
+
+* the grid = the outer ("grid") block's iteration space, ordered so
+  reduction indices vary fastest (output block revisiting => VMEM-resident
+  accumulation in a float32 scratch);
+* each refinement of the grid block becomes one BlockSpec: its view shape
+  is the block shape and its per-dimension affine offsets give the
+  index_map (offsets must step in whole blocks — halo views fall back to
+  the jnp backend);
+* an inner block tagged ``mxu`` (stencil pass) or a flat contraction tile
+  lowers to ``jax.lax.dot_general`` with f32 accumulation;
+* fused epilogue statements (fusion pass) lower to elementwise jnp ops
+  applied when the final reduction step completes (``pl.when``).
+
+Supported pattern: contractions whose tile compute is a (batched) matmul
+plus an optional elementwise epilogue.  Everything else falls back to the
+jnp backend — ``lower_op_pallas`` raises ``UnsupportedPallas``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ir import Block, Constant, Intrinsic, Load, Refinement, RefDir, Store
+from .lower_jnp import _J_BINARY, _J_UNARY
+
+
+class UnsupportedPallas(Exception):
+    pass
+
+
+# --------------------------------------------------------------------------
+# Pattern extraction
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class GridRef:
+    ref: Refinement
+    block_shape: Tuple[int, ...]
+    dim_vars: Tuple[Optional[str], ...]  # grid var addressing each dim
+
+
+def _grid_ref(ref: Refinement, grid_ranges: Mapping[str, int]) -> GridRef:
+    dim_vars: List[Optional[str]] = []
+    for e, size in zip(ref.offsets, ref.shape):
+        if e.is_const():
+            if e.const != 0:
+                raise UnsupportedPallas(f"non-zero const offset {e}")
+            dim_vars.append(None)
+        elif len(e.terms) == 1 and e.const == 0:
+            (v, c) = e.terms[0]
+            if v not in grid_ranges:
+                raise UnsupportedPallas(f"offset var {v} is not a grid index")
+            if c != size:
+                raise UnsupportedPallas(f"halo view: offset step {c} != block dim {size}")
+            dim_vars.append(v)
+        else:
+            raise UnsupportedPallas(f"unsupported offset {e}")
+    return GridRef(ref=ref, block_shape=tuple(ref.shape), dim_vars=tuple(dim_vars))
+
+
+@dataclasses.dataclass
+class ContractionPlan:
+    grid_order: List[str]
+    grid_sizes: Dict[str, int]
+    in_refs: List[GridRef]
+    out_ref: GridRef
+    red_vars: List[str]
+    lhs: str
+    rhs: str
+    lhs_contract: Tuple[int, ...]
+    rhs_contract: Tuple[int, ...]
+    epilogue: List[object]
+    acc_scalar: Optional[str]
+
+
+def _leaf_of(block: Block) -> Block:
+    cur = block
+    while True:
+        subs = cur.sub_blocks()
+        if not subs:
+            return cur
+        if len(subs) != 1:
+            raise UnsupportedPallas("multiple inner blocks")
+        cur = subs[0]
+
+
+def extract_contraction(outer: Block) -> ContractionPlan:
+    grid_ranges = {i.name: i.range for i in outer.idxs if not i.is_passthrough()}
+    ins: List[GridRef] = []
+    out: Optional[GridRef] = None
+    local_alloc: Dict[str, Refinement] = {}
+    for r in outer.refs:
+        if r.dir == RefDir.IN:
+            ins.append(_grid_ref(r, grid_ranges))
+        elif r.dir in (RefDir.OUT, RefDir.INOUT):
+            if out is not None:
+                raise UnsupportedPallas("multiple outputs")
+            out = _grid_ref(r, grid_ranges)
+        elif r.dir == RefDir.NONE:
+            local_alloc[r.into] = r
+    if out is None:
+        raise UnsupportedPallas("no output ref")
+
+    out_vars = {v for v in out.dim_vars if v}
+    red_vars = [v for v in grid_ranges if v not in out_vars]
+    grid_order = [v for v in grid_ranges if v in out_vars] + red_vars
+
+    # ---- locate leaf compute + epilogue ------------------------------------
+    sub_blocks = outer.sub_blocks()
+    epilogue: List[object] = []
+    acc_scalar: Optional[str] = None
+    if sub_blocks:
+        for b in sub_blocks[0].walk():
+            for r in b.refs:
+                if r.dir == RefDir.NONE:
+                    local_alloc.setdefault(r.into, r)
+        # Descend levels; at each level, trailing leaf statements after a
+        # sub-block are the (pure elementwise) fused epilogue, which lifts
+        # soundly from per-point to per-tile granularity.
+        cur: Block = outer
+        leaf_stmts = []
+        while True:
+            msubs = cur.sub_blocks()
+            trailing = []
+            seen = False
+            for s in cur.stmts:
+                if isinstance(s, Block):
+                    seen = True
+                elif seen:
+                    trailing.append(s)
+            if msubs and trailing:
+                epilogue = trailing
+                leaf_stmts = list(_leaf_of(msubs[0]).stmts)
+                break
+            if not msubs:
+                leaf_stmts = list(cur.stmts)
+                break
+            if len(msubs) != 1:
+                raise UnsupportedPallas("multiple inner blocks")
+            cur = msubs[0]
+    else:
+        leaf_stmts = list(outer.stmts)
+
+    # ---- parse the leaf: two loads -> mul -> store(add) --------------------
+    loads: Dict[str, str] = {}
+    mul_args: Optional[Tuple[str, str]] = None
+    for s in leaf_stmts:
+        if isinstance(s, Load):
+            loads[s.into] = s.buf
+        elif isinstance(s, Intrinsic) and s.op == "mul" and len(s.args) == 2:
+            mul_args = (loads.get(s.args[0], ""), loads.get(s.args[1], ""))
+        elif isinstance(s, Intrinsic):
+            raise UnsupportedPallas(f"leaf intrinsic {s.op}")
+    if mul_args is None or not all(mul_args):
+        raise UnsupportedPallas("leaf is not a 2-operand contraction")
+
+    for s in epilogue:
+        if isinstance(s, Load) and s.buf in local_alloc:
+            acc_scalar = s.into
+
+    grid_in_names = {g.ref.into for g in ins}
+    lhs_local, rhs_local = mul_args
+    if lhs_local not in grid_in_names or rhs_local not in grid_in_names:
+        raise UnsupportedPallas("leaf operands are not grid inputs")
+    lhs_gr = next(g for g in ins if g.ref.into == lhs_local)
+    rhs_gr = next(g for g in ins if g.ref.into == rhs_local)
+
+    def contract_axes(gr: GridRef) -> List[int]:
+        axes = []
+        for d in range(gr.ref.rank):
+            v = gr.dim_vars[d]
+            if v is not None and v in out_vars:
+                continue
+            axes.append(d)
+        return axes
+
+    lhs_c, rhs_c = contract_axes(lhs_gr), contract_axes(rhs_gr)
+    lhs_final, rhs_final, used = [], [], set()
+    for a in lhs_c:
+        for b in rhs_c:
+            if b not in used and lhs_gr.block_shape[a] == rhs_gr.block_shape[b]:
+                lhs_final.append(a)
+                rhs_final.append(b)
+                used.add(b)
+                break
+    if not lhs_final:
+        raise UnsupportedPallas("no contraction dims found")
+
+    return ContractionPlan(
+        grid_order=grid_order, grid_sizes=grid_ranges, in_refs=ins, out_ref=out,
+        red_vars=red_vars, lhs=lhs_local, rhs=rhs_local,
+        lhs_contract=tuple(lhs_final), rhs_contract=tuple(rhs_final),
+        epilogue=epilogue, acc_scalar=acc_scalar,
+    )
+
+
+# --------------------------------------------------------------------------
+# Kernel emission
+# --------------------------------------------------------------------------
+def _apply_epilogue(plan: ContractionPlan, acc, tile_args: Dict[str, jnp.ndarray]):
+    env: Dict[str, jnp.ndarray] = {}
+    result = acc
+    for s in plan.epilogue:
+        if isinstance(s, Load):
+            env[s.into] = acc if s.into == plan.acc_scalar else tile_args[s.buf]
+        elif isinstance(s, Constant):
+            env[s.into] = jnp.asarray(s.value, acc.dtype)
+        elif isinstance(s, Intrinsic):
+            args = [env[a] for a in s.args]
+            fn = _J_UNARY[s.op] if len(args) == 1 and s.op in _J_UNARY else _J_BINARY[s.op]
+            env[s.into] = fn(*args)
+        elif isinstance(s, Store):
+            result = env[s.scalar]
+    return result
+
+
+def lower_op_pallas(outer: Block, interpret: bool = False) -> Callable:
+    """Returns fn(arrays: dict) -> output array for one optimized op block."""
+    plan = extract_contraction(outer)
+    grid = tuple(plan.grid_sizes[v] for v in plan.grid_order)
+    gpos = {v: i for i, v in enumerate(plan.grid_order)}
+
+    lhs_gr = next(g for g in plan.in_refs if g.ref.into == plan.lhs)
+    rhs_gr = next(g for g in plan.in_refs if g.ref.into == plan.rhs)
+    extra = [g for g in plan.in_refs if g.ref.into not in (plan.lhs, plan.rhs)]
+
+    def index_map_for(gr: GridRef):
+        def imap(*gidx):
+            return tuple(gidx[gpos[v]] if v is not None else 0 for v in gr.dim_vars)
+        return imap
+
+    dnums = ((plan.lhs_contract, plan.rhs_contract), ((), ()))
+    out_dtype = np.dtype(plan.out_ref.ref.dtype)
+    out_block = plan.out_ref.block_shape
+    has_red = bool(plan.red_vars)
+
+    def kernel(*refs):
+        if has_red:
+            *ins, out_ref, acc_ref = refs
+        else:
+            *ins, out_ref = refs
+            acc_ref = None
+        lhs = ins[0][...]
+        rhs = ins[1][...]
+        part = jax.lax.dot_general(lhs, rhs, dnums, preferred_element_type=jnp.float32)
+        part = part.reshape(out_block)
+        tile_args = {g.ref.into: ins[2 + i][...] for i, g in enumerate(extra)}
+        if has_red:
+            first = functools.reduce(
+                jnp.logical_and, [pl.program_id(gpos[v]) == 0 for v in plan.red_vars]
+            )
+            last = functools.reduce(
+                jnp.logical_and,
+                [pl.program_id(gpos[v]) == plan.grid_sizes[v] - 1 for v in plan.red_vars],
+            )
+
+            @pl.when(first)
+            def _init():
+                acc_ref[...] = jnp.zeros(out_block, jnp.float32)
+
+            acc_ref[...] += part
+
+            @pl.when(last)
+            def _flush():
+                val = acc_ref[...]
+                if plan.epilogue:
+                    val = _apply_epilogue(plan, val, tile_args)
+                out_ref[...] = val.astype(out_ref.dtype)
+        else:
+            val = part
+            if plan.epilogue:
+                val = _apply_epilogue(plan, val, tile_args)
+            out_ref[...] = val.astype(out_ref.dtype)
+
+    in_specs = [
+        pl.BlockSpec(lhs_gr.block_shape, index_map_for(lhs_gr)),
+        pl.BlockSpec(rhs_gr.block_shape, index_map_for(rhs_gr)),
+    ] + [pl.BlockSpec(g.block_shape, index_map_for(g)) for g in extra]
+    out_spec = pl.BlockSpec(out_block, index_map_for(plan.out_ref))
+    out_full_shape = tuple(
+        s * (plan.grid_sizes[v] if v else 1)
+        for s, v in zip(out_block, plan.out_ref.dim_vars)
+    )
+
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_full_shape, out_dtype),
+        scratch_shapes=[pltpu.VMEM(out_block, jnp.float32)] if has_red else [],
+        interpret=interpret,
+    )
+
+    order = [lhs_gr, rhs_gr] + extra
+
+    def fn(arrays: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        args = [jnp.asarray(arrays[g.ref.from_buf]) for g in order]
+        return call(*args)
+
+    return fn

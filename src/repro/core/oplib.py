@@ -1,0 +1,128 @@
+"""Op library: the bridge between the NN layers and the Stripe compiler.
+
+Every dense contraction in the framework's models routes through here:
+the op is expressed in the Tile frontend, compiled through the
+hardware-config pass pipeline (fuse -> autotile -> stencil -> boundary ->
+localize -> schedule), and lowered with the selected backend:
+
+* ``jnp``     — reference backend (runs everywhere; what XLA sees on CPU
+                and in the distributed dry-run, where GSPMD handles layout)
+* ``pallas``  — TPU kernels emitted from the optimized IR
+* ``pallas_interpret`` — the same kernels executed with ``interpret=True``
+                (CPU validation of the TPU path)
+
+Backend selection: ``set_backend()`` or the ``REPRO_BACKEND`` env var.
+Compilation results are cached per (op text, shapes, dtypes, hw, backend).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .frontend import TileProgram
+from .hwconfig import TPU_V5E, HardwareConfig
+from .ir import Block, Program
+from .lower_jnp import lower_program_jnp
+from .lower_pallas import UnsupportedPallas, lower_op_pallas
+from .passes import compile_program
+
+_BACKEND = os.environ.get("REPRO_BACKEND", "jnp")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("jnp", "pallas", "pallas_interpret")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+class CompiledOp:
+    """A Stripe-compiled tensor program with jnp + pallas lowerings."""
+
+    def __init__(self, prog: Program, hw: HardwareConfig, backend: str):
+        self.optimized = compile_program(prog, hw)
+        self.backend = backend
+        self.jnp_fn = lower_program_jnp(self.optimized.source)
+        self.pallas_fns: Dict[str, Callable] = {}
+        self.pallas_ok = False
+        if backend.startswith("pallas"):
+            interpret = backend == "pallas_interpret"
+            blocks = [s for s in self.optimized.entry.stmts if isinstance(s, Block)]
+            try:
+                if len(blocks) == 1:
+                    out_buf = self.optimized.outputs[0]
+                    self.pallas_fns[out_buf] = lower_op_pallas(blocks[0], interpret=interpret)
+                    self.pallas_ok = True
+            except UnsupportedPallas:
+                self.pallas_ok = False
+
+    def __call__(self, arrays: Mapping[str, jnp.ndarray]):
+        if self.pallas_ok:
+            out_buf = self.optimized.outputs[0]
+            return {out_buf: self.pallas_fns[out_buf](arrays)}
+        return self.jnp_fn(arrays)
+
+
+@functools.lru_cache(maxsize=512)
+def _compiled_linear(m: int, k: int, n: int, dtype: str, acc_dtype: str,
+                     act: Optional[str], has_bias: bool, backend: str) -> CompiledOp:
+    tp = TileProgram("linear")
+    tp.input("X", (m, k), dtype)
+    tp.input("W", (k, n), dtype)
+    if has_bias:
+        tp.input("B", (n,), acc_dtype)
+    needs_epilogue = has_bias or act
+    if needs_epilogue:
+        tp.temp("T", (m, n))
+        tp.output("O", (m, n), dtype)
+        tp.op("T[i, j] += X[i, c] * W[c, j]")
+        expr = "T[i, j]"
+        if has_bias:
+            expr = f"({expr} + B[j])"
+        if act:
+            expr = f"{act}({expr})"
+        tp.op(f"O[i, j] = {expr}")
+    else:
+        tp.output("O", (m, n), dtype)
+        tp.op("O[i, j] += X[i, c] * W[c, j]")
+    return CompiledOp(tp.build(), TPU_V5E, backend)
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
+           act: Optional[str] = None) -> jnp.ndarray:
+    """Stripe-compiled linear layer: ``act(x @ w + bias)``.
+
+    On the jnp backend this lowers to a plain einsum (so XLA/GSPMD handle
+    sharding in the distributed setting); on the pallas backends it runs
+    the Stripe-generated fused kernel.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    m = 1
+    for s in lead:
+        m *= s
+    backend = _BACKEND
+    if backend == "jnp":
+        # fast path: identical semantics, no per-shape Program build
+        out = jnp.einsum("mk,kn->mn", x.reshape(m, k), w)
+        if bias is not None:
+            out = out + bias
+        if act is not None:
+            from .lower_jnp import _J_UNARY
+
+            out = _J_UNARY[act](out)
+        return out.reshape(*lead, n)
+    op = _compiled_linear(m, k, n, str(x.dtype), str(bias.dtype) if bias is not None else "float32",
+                          act, bias is not None, backend)
+    arrays = {"X": x.reshape(m, k), "W": w}
+    if bias is not None:
+        arrays["B"] = bias
+    out = op(arrays)["O"]
+    return out.reshape(*lead, n)

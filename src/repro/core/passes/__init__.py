@@ -1,0 +1,53 @@
+"""Optimization pass framework (paper §1.3: "selects and parameterizes a
+list of optimization passes from a common pool; these passes are then
+iteratively applied to the IR").
+
+Passes are generic and hardware-agnostic; the hardware config selects and
+parameterizes them.  Each pass maps Program -> Program.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Mapping
+
+from ..hwconfig import HardwareConfig
+from ..ir import Program
+
+PassFn = Callable[[Program, HardwareConfig, Mapping], Program]
+
+_REGISTRY: Dict[str, PassFn] = {}
+
+
+def register(name: str):
+    def deco(fn: PassFn) -> PassFn:
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_pass(name: str) -> PassFn:
+    if name not in _REGISTRY:
+        from . import autotile, boundary, fuse, localize, partition, schedule, stencil, transpose  # noqa: F401
+    return _REGISTRY[name]
+
+
+class PassManager:
+    def __init__(self, hw: HardwareConfig):
+        self.hw = hw
+        self.trace: list = []
+
+    def run(self, prog: Program) -> Program:
+        import copy
+
+        from . import autotile, boundary, fuse, localize, partition, schedule, stencil, transpose  # noqa: F401
+
+        source = prog.source or copy.deepcopy(prog)
+        for name, params in self.hw.passes:
+            fn = _REGISTRY[name]
+            prog = fn(prog, self.hw, params)
+            self.trace.append(name)
+        prog.source = source
+        return prog
+
+
+def compile_program(prog: Program, hw: HardwareConfig) -> Program:
+    return PassManager(hw).run(prog)

@@ -1,0 +1,114 @@
+"""Autotiling (paper §3.3).
+
+Explores a space of tile shapes under memory-capacity and stencil-multiple
+constraints with a cost function (cache-lines/MAC or TPU roofline, per the
+hardware config) and rewrites the chosen tiling via ``split_block``.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from ..cost import TileCost, evaluate_tiling
+from ..hwconfig import HardwareConfig
+from ..ir import Block, Program
+from ..poly import factors
+from ..tiling import split_block
+from . import register
+
+
+def _candidates(r: int, search: str) -> List[int]:
+    if search == "divisors":
+        return factors(r)
+    if search == "exhaustive":
+        return list(range(1, r + 1))
+    # pow2 (default): powers of two up to r, plus r itself
+    out = []
+    t = 1
+    while t < r:
+        out.append(t)
+        t *= 2
+    out.append(r)
+    return out
+
+
+def choose_tiling(block: Block, hw: HardwareConfig, params: Mapping) -> Tuple[Dict[str, int], TileCost]:
+    free = {i.name: i.range for i in block.idxs if not i.is_passthrough()}
+    search = params.get("search", "pow2")
+    names = sorted(free)
+    cands = {v: _candidates(free[v], search) for v in names}
+    # multiples of an existing stencil (tags like "stencil:v=8")
+    for t in block.tags:
+        if t.startswith("stencil:"):
+            v, m = t.split(":")[1].split("=")
+            m = int(m)
+            cands[v] = [c for c in cands[v] if c % m == 0] or [m]
+
+    n_combos = 1
+    for v in names:
+        n_combos *= len(cands[v])
+    max_combos = params.get("max_combos", 200_000)
+    if n_combos > max_combos:
+        # coordinate-descent fallback: greedy per-dim refinement
+        return _coordinate_descent(block, hw, params, free, cands)
+
+    best: Optional[Tuple[Dict[str, int], TileCost]] = None
+    for combo in itertools.product(*(cands[v] for v in names)):
+        tiles = dict(zip(names, combo))
+        c = evaluate_tiling(block, tiles, hw, params)
+        if not c.feasible:
+            continue
+        if best is None or c.cost < best[1].cost:
+            best = (tiles, c)
+    if best is None:
+        # nothing feasible: fall back to all-ones tiles (always fits)
+        tiles = {v: 1 for v in names}
+        return tiles, evaluate_tiling(block, tiles, hw, params)
+    return best
+
+
+def _coordinate_descent(block, hw, params, free, cands):
+    tiles = {v: c[-1] for v, c in cands.items()}
+    cost = evaluate_tiling(block, tiles, hw, params)
+    for _ in range(6):
+        improved = False
+        for v in sorted(free):
+            best_t, best_c = tiles[v], cost
+            for t in cands[v]:
+                trial = dict(tiles)
+                trial[v] = t
+                c = evaluate_tiling(block, trial, hw, params)
+                if c.feasible and (not best_c.feasible or c.cost < best_c.cost):
+                    best_t, best_c = t, c
+                    improved = True
+            tiles[v] = best_t
+            cost = best_c
+        if not improved:
+            break
+    return tiles, cost
+
+
+@register("autotile")
+def autotile_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
+    new_stmts = []
+    for s in prog.entry.stmts:
+        if not isinstance(s, Block) or not ({"contraction", "elementwise"} & s.tags) or "grid" in s.tags:
+            new_stmts.append(s)
+            continue
+        tiles, cost = choose_tiling(s, hw, params)
+        free = {i.name: i.range for i in s.idxs if not i.is_passthrough()}
+        if all(tiles.get(v, free[v]) >= free[v] for v in free) and cost.feasible:
+            # whole op fits in one tile: keep flat, mark it
+            s.add_tag("fits_inner")
+            s.comments = f"autotile: single tile ({cost.why or 'fits'})"
+            new_stmts.append(s)
+            continue
+        outer = split_block(s, tiles)
+        outer.add_tag("autotiled")
+        outer.comments = (
+            f"autotile: tiles={tiles} cost={cost.cost:.3e} "
+            f"(mem={cost.mem_bytes}B tiles={cost.n_tiles})"
+        )
+        new_stmts.append(outer)
+    prog.entry.stmts = new_stmts
+    return prog

@@ -1,0 +1,80 @@
+"""Separating interior and boundary tiles (paper §2.3).
+
+For a tiled ("grid") block whose constraints only bite at the edges of an
+outer index (overflow tiles from non-dividing tile sizes, or conv halos),
+split that index range into interior/boundary pieces and drop every
+constraint that the interior piece provably satisfies — the interior
+block becomes constraint-free (dense, vectorizable), and irregularity is
+confined to the boundary blocks.
+"""
+from __future__ import annotations
+
+from typing import List, Mapping
+
+from ..hwconfig import HardwareConfig
+from ..ir import Block, Program
+from ..tiling import outer_bounds_of, prune_constraints, shift_index
+from . import register
+
+
+def _n_constraints(blk: Block) -> int:
+    n = len(blk.constraints)
+    for s in blk.stmts:
+        if isinstance(s, Block):
+            n += _n_constraints(s)
+    return n
+
+
+def split_boundary(outer: Block, mode: str = "remainder", max_splits: int = 2) -> List[Block]:
+    """Returns a list of blocks that partition ``outer``'s iteration space."""
+    pieces = [outer]
+    splits_done = 0
+    for idx in list(outer.idxs):
+        if idx.is_passthrough() or idx.range < 2 or splits_done >= max_splits:
+            continue
+        v, n = idx.name, idx.range
+        cut_points = [n - 1] if mode == "remainder" else sorted({1, n - 1})
+        new_pieces: List[Block] = []
+        for p in pieces:
+            if not any(i.name == v and i.range == n for i in p.idxs):
+                new_pieces.append(p)
+                continue
+            base = _n_constraints(p)
+            # try splitting at the last tile (remainder) and optionally first
+            segs = []
+            prev = 0
+            for c in cut_points:
+                if c > prev:
+                    segs.append((prev, c))
+                prev = c
+            segs.append((prev, n))
+            cand = []
+            for lo, hi in segs:
+                piece = shift_index(p, v, hi - lo, lo)
+                prune_constraints(piece, outer_bounds_of(piece))
+                cand.append(piece)
+            if sum(_n_constraints(c) for c in cand) < base * len(cand) and any(
+                _n_constraints(c) < base for c in cand
+            ):
+                for k, c in enumerate(cand):
+                    c.name = f"{p.name}.{v}{k}"
+                    c.add_tag("boundary_split")
+                new_pieces.extend(cand)
+                splits_done += 1
+            else:
+                new_pieces.append(p)
+        pieces = new_pieces
+    return pieces
+
+
+@register("boundary")
+def boundary_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
+    mode = params.get("mode", "remainder")
+    new_stmts = []
+    for s in prog.entry.stmts:
+        if isinstance(s, Block) and "grid" in s.tags and _n_constraints(s) > 0:
+            new_stmts.extend(split_boundary(s, mode=mode, max_splits=params.get("max_splits", 2)))
+        else:
+            new_stmts.append(s)
+    prog.entry.stmts = new_stmts
+    return prog

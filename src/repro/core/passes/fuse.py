@@ -1,0 +1,170 @@
+"""Fusion (paper §2.3): merge a contraction with its elementwise consumer
+so both run tile-by-tile under one outer loop, eliminating the
+intermediate tensor from outer memory.
+
+The rewrite makes the contraction's output a *block-local scalar
+accumulator* (an internally-scoped temporary in Def. 2's terms):
+
+    O[i,j] = relu(T[i,j]),  T[i,j] += A[i,c]*B[c,j]
+      ==>
+    block [i, j] {                       # fused, one iteration per output
+      acc: local (1,1) :add
+      block [c] { acc += A[i,c]*B[c,j] } # reduction fully inside
+      $t = load(acc); $r = relu($t); O = store($r)
+    }
+
+which autotiling then tiles like any other block.  This is also the
+paper's "Scalarization and Memory Localization": T is never materialized.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, List, Mapping, Optional
+
+from ..affine import Affine, aff
+from ..hwconfig import HardwareConfig
+from ..ir import Block, Intrinsic, Load, Program, RefDir, Refinement, Store, dtype_bytes
+from ..lower_jnp import analyze_flat
+from ..tiling import split_block
+from . import register
+
+
+def _buffer_usage(prog: Program) -> Dict[str, Dict[str, List[Block]]]:
+    use: Dict[str, Dict[str, List[Block]]] = {}
+    for s in prog.entry.stmts:
+        if not isinstance(s, Block):
+            continue
+        for r in s.refs:
+            d = use.setdefault(r.from_buf, {"r": [], "w": []})
+            if r.dir in (RefDir.IN, RefDir.INOUT):
+                d["r"].append(s)
+            if r.dir in (RefDir.OUT, RefDir.INOUT):
+                d["w"].append(s)
+    return use
+
+
+def _out_vars(block: Block) -> Optional[List[str]]:
+    for r in block.refs:
+        if r.dir == RefDir.OUT:
+            vs = []
+            for e in r.offsets:
+                if len(e.terms) == 1 and e.const == 0 and e.terms[0][1] == 1:
+                    vs.append(e.terms[0][0])
+                else:
+                    return None
+            return vs
+    return None
+
+
+def try_fuse(p: Block, c: Block, prog: Program, hw: HardwareConfig, params: Mapping) -> Optional[Block]:
+    try:
+        pop = analyze_flat(p)
+        cop = analyze_flat(c)
+    except ValueError:
+        return None
+    if cop.agg != "assign" or pop.agg == "assign":
+        return None
+    t_buf = pop.out_ref.from_buf
+    if t_buf in prog.outputs or t_buf in prog.inputs:
+        return None
+    pv = _out_vars(p)
+    if pv is None:
+        return None
+    # the consumer must read T pointwise with plain indices, once
+    t_reads = [r for r in c.refs if r.from_buf == t_buf]
+    if len(t_reads) != 1:
+        return None
+    cv = []
+    for e in t_reads[0].offsets:
+        if len(e.terms) == 1 and e.const == 0 and e.terms[0][1] == 1:
+            cv.append(e.terms[0][0])
+        else:
+            return None
+    c_out = _out_vars(c)
+    if c_out is None or set(c_out) != set(cv):
+        return None
+    # ranges must agree dim by dim
+    pr, cr = p.idx_ranges(), c.idx_ranges()
+    if any(pr[a] != cr[b] for a, b in zip(pv, cv)):
+        return None
+
+    # ---- feasibility: the reduction must fit the inner memory when tiled --
+    red_elems = 0
+    for r in p.refs:
+        if r.dir != RefDir.IN:
+            continue
+        span = 1
+        for e in r.offsets:
+            for n, coef in e.terms:
+                if n not in pv:
+                    span *= abs(coef) * (pr[n] - 1) + 1
+        red_elems += span * dtype_bytes(r.dtype)
+    cap = hw.inner_mem().size_bytes * params.get("mem_cap_frac", 0.45)
+    if red_elems * 2 > cap:
+        return None
+
+    rename = {b: a for a, b in zip(pv, cv)}
+
+    # ---- build: per-output-point split of the producer --------------------
+    f = split_block(p, {v: 1 for v in pv}, name_suffix="f")
+    f.name = f"{p.name}+{c.name}"
+    f.tags = {"contraction", "fused"}
+
+    # redirect T's outer refinement to a local scalar accumulator
+    for i, r in enumerate(f.refs):
+        if r.from_buf == t_buf and r.dir == RefDir.OUT:
+            f.refs[i] = Refinement(
+                dir=RefDir.NONE, from_buf=r.into, into=r.into,
+                offsets=(aff(0),) * r.rank, shape=(1,) * r.rank,
+                dtype=r.dtype, agg=pop.agg,
+            )
+            acc_name = r.into
+            break
+    else:
+        return None
+
+    # ---- epilogue: consumer statements at the outer level -----------------
+    for r in c.refs:
+        if r.from_buf == t_buf:
+            continue
+        nr = r.clone(offsets=tuple(o.rename(rename) for o in r.offsets))
+        if nr.into == acc_name:
+            nr.into = nr.into + "_c"
+        f.refs.append(nr)
+    for s in c.stmts:
+        s = copy.deepcopy(s)
+        if isinstance(s, Load):
+            if s.buf == t_reads[0].into:
+                s = Load(acc_name, s.into)
+            elif s.buf == acc_name:
+                s = Load(s.buf + "_c", s.into)
+        f.stmts.append(s)
+    return f
+
+
+@register("fuse")
+def fuse_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
+    changed = True
+    while changed:
+        changed = False
+        use = _buffer_usage(prog)
+        stmts = [s for s in prog.entry.stmts if isinstance(s, Block)]
+        for p in stmts:
+            ov = [r.from_buf for r in p.refs if r.dir == RefDir.OUT]
+            if not ov:
+                continue
+            t = ov[0]
+            u = use.get(t, {"r": [], "w": []})
+            if len(u["w"]) != 1 or len(u["r"]) != 1:
+                continue
+            c = u["r"][0]
+            if c is p:
+                continue
+            fused = try_fuse(p, c, prog, hw, params)
+            if fused is not None:
+                i = prog.entry.stmts.index(p)
+                prog.entry.stmts[i] = fused
+                prog.entry.stmts.remove(c)
+                changed = True
+                break
+    return prog

@@ -1,0 +1,64 @@
+"""Scheduling (paper §2.3 / §3.2): build the dependency DAG between block
+statements from refinement aliasing, order them, mark independent groups
+parallel, and assign inner-memory addresses to tile views (arena style).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Set, Tuple
+
+from ..hwconfig import HardwareConfig
+from ..ir import Block, Program, RefDir, dtype_bytes
+from . import register
+
+
+def dependency_dag(blocks: List[Block]) -> List[Set[int]]:
+    """deps[i] = set of j<i that statement i must wait for (RAW/WAR/WAW)."""
+    deps: List[Set[int]] = [set() for _ in blocks]
+    for i, b in enumerate(blocks):
+        my_r = {r.from_buf for r in b.refs if r.dir in (RefDir.IN, RefDir.INOUT)}
+        my_w = {r.from_buf for r in b.refs if r.dir in (RefDir.OUT, RefDir.INOUT)}
+        for j in range(i):
+            o = blocks[j]
+            o_r = {r.from_buf for r in o.refs if r.dir in (RefDir.IN, RefDir.INOUT)}
+            o_w = {r.from_buf for r in o.refs if r.dir in (RefDir.OUT, RefDir.INOUT)}
+            if (my_r & o_w) or (my_w & o_r) or (my_w & o_w):
+                deps[i].add(j)
+    return deps
+
+
+def wavefronts(deps: List[Set[int]]) -> List[int]:
+    """Earliest-start level per statement (independent stmts share levels)."""
+    level = [0] * len(deps)
+    for i in range(len(deps)):
+        level[i] = 1 + max((level[j] for j in deps[i]), default=-1)
+    return level
+
+
+@register("schedule")
+def schedule_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
+    blocks = [s for s in prog.entry.stmts if isinstance(s, Block)]
+    deps = dependency_dag(blocks)
+    levels = wavefronts(deps)
+    for b, lvl in zip(blocks, levels):
+        b.add_tag(f"sched:{lvl}")
+
+    # arena address assignment for inner-memory views inside each grid block
+    unit = params.get("unit", hw.inner_mem().name)
+    for b in blocks:
+        for g in b.walk():
+            if "grid" not in g.tags:
+                continue
+            addr = 0
+            for inner in g.sub_blocks():
+                for r in inner.refs:
+                    if r.location is not None and r.location.unit == unit and r.location.addr is None:
+                        size = dtype_bytes(r.dtype)
+                        for s in r.shape:
+                            size *= s
+                        from ..ir import Location
+
+                        r.location = Location(unit=r.location.unit, bank=r.location.bank, addr=addr)
+                        addr += (size + 511) & ~511  # 512B aligned
+            if addr > 0:
+                g.add_tag(f"arena:{addr}")
+    return prog

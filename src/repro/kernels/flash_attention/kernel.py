@@ -1,0 +1,137 @@
+"""Flash attention forward (TPU Pallas).
+
+Structure: grid (batch*heads, q_blocks, kv_blocks) with the kv dimension
+innermost; running (m, l, acc) state lives in VMEM scratch and persists
+across kv steps; the output block is written on the last kv step.  Causal
+blocks above the diagonal are skipped entirely (block-level early out).
+
+The q/kv block sizes are chosen by the Stripe autotiler's roofline cost
+model over the QK^T contraction (see ``choose_block_sizes``) — the paper's
+"hardware config decides parameters, not the kernel author" discipline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def choose_block_sizes(seq_q: int, seq_k: int, head_dim: int) -> Tuple[int, int]:
+    """Stripe autotiler picks (block_q, block_k) for the attention score
+    contraction S[q,k] += Q[q,d] * K[k,d]."""
+    from ...core.frontend import single_op_program
+    from ...core.hwconfig import TPU_V5E
+    from ...core.passes.autotile import choose_tiling
+
+    prog = single_op_program(
+        "S[q, k] += Q[q, d] * K[k, d]",
+        {"Q": ((seq_q, head_dim), "bfloat16"), "K": ((seq_k, head_dim), "bfloat16"),
+         "S": ((seq_q, seq_k), "float32")},
+        out="S",
+    )
+    params = {"cost": "roofline", "search": "pow2", "mem_cap_frac": 0.2, "count_untiled": True}
+    tiles, _cost = choose_tiling(prog.entry.stmts[0], TPU_V5E, params)
+    bq = max(min(tiles.get("q", 512), seq_q), min(128, seq_q))
+    bk = max(min(tiles.get("k", 512), seq_k), min(128, seq_k))
+    return bq, bk
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               sm_scale: float, causal: bool, block_q: int, block_k: int,
+               n_kv: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        # skip blocks strictly above the diagonal
+        run = (ki * block_k) <= (qi * block_q + block_q - 1)
+
+    @pl.when(run if causal else (ki >= 0))
+    def _step():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "sm_scale", "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, sm_scale: Optional[float] = None,
+                    block_q: Optional[int] = None, block_k: Optional[int] = None,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D).  GQA: q heads grouped over
+    kv heads.  Returns (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = float(1.0 / np.sqrt(d))
+    if block_q is None or block_k is None:
+        cq, ck = choose_block_sizes(sq, sk, d)
+        block_q = block_q or min(cq, sq)
+        block_k = block_k or min(ck, sk)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    n_q, n_kv = sq // block_q, sk // block_k
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
+
+    grid = (b * hq, n_q, n_kv)
+    kern = functools.partial(
+        _fa_kernel, sm_scale=sm_scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_kv=n_kv, seq_k=sk)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, qi, ki, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, qi, ki, g=group: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, d)

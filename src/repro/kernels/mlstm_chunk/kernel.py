@@ -1,0 +1,155 @@
+"""Chunkwise-parallel gated linear attention (TPU Pallas).
+
+One kernel serves both mLSTM (xLSTM) and Mamba2's SSD: both are linear
+recurrences
+
+    C_t = decay_t * C_{t-1} + gain_t * k_t v_t^T          (Dk x Dv state)
+    n_t = decay_t * n_{t-1} + gain_t * k_t                (normalizer, optional)
+    h_t = q_t @ C_t [/ max(|q_t . n_t|, 1)]
+
+evaluated chunk-by-chunk: within a chunk the contribution is a masked
+(q k^T)-style matmul (MXU work), across chunks the (Dk, Dv) state is
+carried in VMEM scratch along the sequential innermost grid dimension.
+This is the nested-polyhedral structure of the paper applied to a
+recurrence: the chunk boundary is exactly the aggregation boundary.
+
+Numerics: decays are passed in log space (log_decay <= 0), so every
+``exp`` in the chunk math has a non-positive argument — no overflow.  The
+xLSTM paper's per-step max-stabilizer is replaced by this chunk-level
+log-space form (see DESIGN.md hardware-adaptation notes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def choose_chunk(seq: int, dk: int, dv: int) -> int:
+    """Stripe autotiler chooses the chunk length for the intra-chunk
+    contraction H[t,p] += S[t,s] * V[s,p]."""
+    from ...core.frontend import single_op_program
+    from ...core.hwconfig import TPU_V5E
+    from ...core.passes.autotile import choose_tiling
+
+    prog = single_op_program(
+        "H[t, p] += S[t, s] * V[s, p]",
+        {"S": ((seq, seq), "float32"), "V": ((seq, dv), "float32"),
+         "H": ((seq, dv), "float32")},
+        out="H",
+    )
+    tiles, _ = choose_tiling(
+        prog.entry.stmts[0], TPU_V5E,
+        {"cost": "roofline", "search": "pow2", "mem_cap_frac": 0.1},
+    )
+    c = min(tiles.get("t", 256), 256)
+    while seq % c != 0:
+        c //= 2
+    return max(c, 1)
+
+
+def _gla_kernel(q_ref, k_ref, v_ref, ld_ref, g_ref, o_ref, c_ref, n_ref, *,
+                L: int, normalize: bool, scale: float):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale       # (L, Dk)
+    k = k_ref[0].astype(jnp.float32)               # (L, Dk)
+    v = v_ref[0].astype(jnp.float32)               # (L, Dv)
+    ld = ld_ref[0, :, 0].astype(jnp.float32)       # (L,) log decay
+    g = g_ref[0, :, 0].astype(jnp.float32)         # (L,) gain
+
+    cum = jnp.cumsum(ld)                           # inclusive: cum_t
+    # intra-chunk scores: (q_t . k_s) * exp(cum_t - cum_s) * g_s, s<=t
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    # mask *inside* the exp: above the diagonal cum_t - cum_s > 0 can
+    # overflow for strong decays (inf * 0 = NaN otherwise)
+    dmat = jnp.where(t_idx >= s_idx, cum[:, None] - cum[None, :], -jnp.inf)
+    scores = qk * jnp.exp(dmat) * g[None, :]
+
+    c_prev = c_ref[...]                            # (Dk, Dv)
+    n_prev = n_ref[...]                            # (Dk, 1)
+    h_intra = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    h_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        q, c_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    h = h_intra + h_inter
+    if normalize:
+        norm = jnp.sum(scores, axis=1, keepdims=True) + jnp.exp(cum)[:, None] * (
+            jax.lax.dot_general(q, n_prev, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32))
+        h = h / jnp.maximum(jnp.abs(norm), 1.0)
+    o_ref[0] = h.astype(o_ref.dtype)
+
+    # ---- state update ------------------------------------------------------
+    total = cum[L - 1]
+    w = jnp.exp(total - cum) * g                   # per-step carry weight
+    kw = k * w[:, None]
+    c_ref[...] = jnp.exp(total) * c_prev + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    n_ref[...] = jnp.exp(total) * n_prev + jnp.sum(kw, axis=0)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "normalize", "scale", "interpret"))
+def chunked_gla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                log_decay: jnp.ndarray, gain: jnp.ndarray,
+                chunk: Optional[int] = None, normalize: bool = True,
+                scale: float = 1.0, interpret: bool = False) -> jnp.ndarray:
+    """q/k: (B, H, S, Dk); v: (B, H, S, Dv); log_decay/gain: (B, H, S).
+    Returns (B, H, S, Dv)."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    if chunk is None:
+        chunk = choose_chunk(s, dk, dv)
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    qf = q.reshape(b * h, s, dk)
+    kf = k.reshape(b * h, s, dk)
+    vf = v.reshape(b * h, s, dv)
+    ldf = log_decay.reshape(b * h, s, 1)
+    gf = gain.reshape(b * h, s, 1)
+
+    kern = functools.partial(_gla_kernel, L=chunk, normalize=normalize, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(b * h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv), jnp.float32),
+            pltpu.VMEM((dk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, ldf, gf)
+    return out.reshape(b, h, s, dv)
+
+
+def mlstm_chunk(q, k, v, i_gate, f_gate, chunk: Optional[int] = None,
+                interpret: bool = False) -> jnp.ndarray:
+    """xLSTM mLSTM: decay = sigmoid(f), gain = exp(i) (i pre-clamped),
+    normalized output, q scaled by Dk^-1/2."""
+    dk = q.shape[-1]
+    log_decay = jax.nn.log_sigmoid(f_gate)
+    gain = jnp.exp(jnp.minimum(i_gate, 8.0))
+    return chunked_gla(q, k, v, log_decay, gain, chunk=chunk, normalize=True,
+                       scale=float(dk) ** -0.5, interpret=interpret)

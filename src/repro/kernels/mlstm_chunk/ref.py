@@ -1,0 +1,43 @@
+"""Sequential-recurrence oracle for the chunked gated linear attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_ref(q, k, v, log_decay, gain, normalize: bool = True, scale: float = 1.0):
+    """Step-by-step recurrence (lax.scan over time)."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    qf = q.reshape(b * h, s, dk).astype(jnp.float32) * scale
+    kf = k.reshape(b * h, s, dk).astype(jnp.float32)
+    vf = v.reshape(b * h, s, dv).astype(jnp.float32)
+    dec = jnp.exp(log_decay.reshape(b * h, s).astype(jnp.float32))
+    gn = gain.reshape(b * h, s).astype(jnp.float32)
+
+    def step(carry, xs):
+        C, n = carry
+        qt, kt, vt, dt, gt = xs
+        C = dt[:, None, None] * C + gt[:, None, None] * (kt[:, :, None] * vt[:, None, :])
+        n = dt[:, None] * n + gt[:, None] * kt
+        h_t = jnp.einsum("bd,bdp->bp", qt, C)
+        if normalize:
+            denom = jnp.maximum(jnp.abs(jnp.einsum("bd,bd->b", qt, n)), 1.0)
+            h_t = h_t / denom[:, None]
+        return (C, n), h_t
+
+    C0 = jnp.zeros((b * h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b * h, dk), jnp.float32)
+    xs = (
+        jnp.moveaxis(qf, 1, 0), jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0),
+        jnp.moveaxis(dec, 1, 0), jnp.moveaxis(gn, 1, 0),
+    )
+    _, hs = jax.lax.scan(step, (C0, n0), xs)
+    return jnp.moveaxis(hs, 0, 1).reshape(b, h, s, dv).astype(q.dtype)
+
+
+def mlstm_ref(q, k, v, i_gate, f_gate):
+    dk = q.shape[-1]
+    log_decay = jax.nn.log_sigmoid(f_gate)
+    gain = jnp.exp(jnp.minimum(i_gate, 8.0))
+    return gla_ref(q, k, v, log_decay, gain, normalize=True, scale=float(dk) ** -0.5)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the Stripe-generated matmul(+epilogue) kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+_ACTS = {
+    None: lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0),
+    "silu": lambda x: x * (1.0 / (1.0 + jnp.exp(-x))),
+    "sigmoid": lambda x: 1.0 / (1.0 + jnp.exp(-x)),
+    "tanh": jnp.tanh,
+    "square": jnp.square,
+}
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
+               act: Optional[str] = None) -> jnp.ndarray:
+    acc = jnp.einsum("mk,kn->mn", x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    if act == "gelu":
+        import jax
+
+        acc = jax.nn.gelu(acc, approximate=False)
+    elif act is not None:
+        acc = _ACTS[act](acc)
+    return acc.astype(x.dtype)

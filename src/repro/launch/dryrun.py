@@ -1,0 +1,221 @@
+"""Multi-pod dry-run: ``.lower().compile()`` every (architecture x input
+shape) cell on the production meshes and record memory/cost/collective
+statistics.
+
+MUST be run as a script/module so the XLA_FLAGS below take effect before
+jax initializes:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_results.json
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..configs.base import SHAPES, applicable_shapes
+from ..models.build import build_model, input_specs
+from ..optim import adamw
+from ..parallel import sharding as shd
+from .hlo_stats import collective_stats, total_collective_bytes
+from .mesh import dp_axes, dp_size, make_production_mesh
+
+
+def _eval_param_shapes(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def _opt_shapes(param_shapes):
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, param_shapes),
+        "v": jax.tree.map(zeros, param_shapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def build_step(model, cfg, shape, mesh):
+    """Returns (fn, arg_shapes, in_shardings, out_shardings)."""
+    dpx = dp_axes(mesh)
+    dps = dp_size(mesh)
+    sizes = dict(mesh.shape)
+    opt_cfg = adamw.AdamWConfig()
+    pshapes = _eval_param_shapes(model)
+    pspecs = shd.param_specs(pshapes, sizes)
+    specs_in = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        def train_step(params, opt_state, batch):
+            (loss, _metrics), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, remat=True), has_aux=True)(params)
+            new_p, new_o, info = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+            return loss, new_p, new_o
+
+        oshapes = _opt_shapes(pshapes)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        bspecs = shd.batch_specs(specs_in, dpx, sizes)
+        in_sh = (pspecs, ospecs, bspecs)
+        out_sh = (P(), pspecs, ospecs)
+        args = (pshapes, oshapes, specs_in)
+        return train_step, args, in_sh, out_sh
+
+    # vlm caches hold the prepended patch positions too
+    cache_len = shape.seq_len + (cfg.frontend_len if cfg.frontend == "patches" else 0)
+
+    if shape.kind == "prefill":
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, cache_len))
+        cspecs = shd.cache_specs(cache_shapes, shape.global_batch, dps, dpx, sizes)
+
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        bspecs = shd.batch_specs(specs_in, dpx, sizes)
+        in_sh = (pspecs, bspecs, cspecs)
+        out_sh = (P(), cspecs)
+        args = (pshapes, specs_in, cache_shapes)
+        return prefill_step, args, in_sh, out_sh
+
+    # decode: one new token against a cache of seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, cache_len))
+    cspecs = shd.cache_specs(cache_shapes, shape.global_batch, dps, dpx, sizes)
+    tok_spec = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch["tokens"])
+
+    bspecs = shd.batch_specs(tok_spec, dpx, sizes) if shape.global_batch >= dps else jax.tree.map(lambda l: P(), tok_spec)
+    in_sh = (pspecs, cspecs, bspecs)
+    out_sh = (P(), cspecs)
+    args = (pshapes, cache_shapes, tok_spec)
+    return serve_step, args, in_sh, out_sh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             keep_hlo: bool = False) -> Dict[str, Any]:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    t0 = time.time()
+    fn, args, in_sh, out_sh = build_step(model, cfg, shape, mesh)
+
+    with mesh:
+        to_sharding = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P))
+        jitted = jax.jit(fn, in_shardings=tuple(to_sharding(s) for s in in_sh),
+                         out_shardings=to_sharding(out_sh))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k in ("flops", "bytes accessed", "optimal_seconds"):
+            if k in ca:
+                cost[k] = float(ca[k])
+    except Exception as e:  # pragma: no cover
+        cost["error"] = str(e)
+
+    hlo = compiled.as_text()
+    # dominant scan trip count: layer stack (groups for zamba)
+    trip = cfg.n_layers + cfg.n_enc_layers
+    if cfg.hybrid:
+        trip = (cfg.n_layers + cfg.hybrid.shared_attn_every - 1) // cfg.hybrid.shared_attn_every
+    colls = collective_stats(hlo, body_multiplier=trip)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "cost": cost,
+        "collectives": colls,
+        "collective_bytes": sum(d["operand_bytes"] for d in colls.values()),
+        "scan_trip_count": trip,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if keep_hlo:
+        result["hlo"] = hlo
+    return result
+
+
+def all_cells():
+    for arch in configs.names():
+        cfg = configs.get(arch)
+        for shape in applicable_shapes(cfg):
+            yield arch, shape.name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch} x {shape} [{'2x16x16' if mp else '16x16'}]"
+            try:
+                r = run_cell(arch, shape, multi_pod=mp)
+                mm = r["memory"].get("argument_size_in_bytes", 0) / (1 << 30)
+                print(f"OK   {tag}: compile={r['compile_s']}s args={mm:.1f}GiB "
+                      f"flops={r['cost'].get('flops', 0):.3e} coll={r['collective_bytes']:.3e}B",
+                      flush=True)
+                results.append(r)
+            except Exception as e:
+                n_fail += 1
+                print(f"FAIL {tag}: {e}", flush=True)
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "ok": False, "error": str(e)})
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"done: {len(results) - n_fail}/{len(results)} cells passed", flush=True)
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

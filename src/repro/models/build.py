@@ -1,0 +1,88 @@
+"""Uniform model API: ``build_model(cfg)`` returns a ``Model`` with
+init / loss / prefill / decode_step / init_cache, dispatching on family.
+
+Also provides ``input_specs(cfg, shape)`` (ShapeDtypeStruct stand-ins for
+the dry-run) and ``make_batch`` (small real arrays for smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import encdec, hybrid, lm, xlstm_model
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = lm
+    elif cfg.family == "hybrid":
+        mod = hybrid
+    elif cfg.family == "ssm" and cfg.xlstm is not None:
+        mod = xlstm_model
+    elif cfg.family == "audio" and cfg.enc_dec:
+        mod = encdec
+    else:
+        raise ValueError(f"no model for family {cfg.family}")
+
+    return Model(
+        cfg=cfg,
+        init=lambda rng: mod.init_params(cfg, rng),
+        loss=lambda p, batch, remat=True: mod.loss_fn(p, cfg, batch, remat=remat),
+        prefill=lambda p, batch, cache: mod.prefill(p, cfg, batch, cache),
+        decode_step=lambda p, cache, tok: mod.decode_step(p, cfg, cache, tok),
+        init_cache=lambda batch, max_len, dtype=None: mod.init_cache(
+            cfg, batch, max_len, jnp.dtype(dtype or cfg.dtype)),
+    )
+
+
+# --------------------------------------------------------------------------
+# Input specs (dry-run) and synthetic batches (smoke)
+# --------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        specs = {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.frontend == "patches":
+            specs["patches"] = jax.ShapeDtypeStruct((b, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.frontend == "frames":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": tok}
+        if cfg.frontend == "patches":
+            specs["patches"] = jax.ShapeDtypeStruct((b, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.frontend == "frames":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    # decode: one new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def make_batch(cfg: ArchConfig, shape_kind: str, batch: int, seq: int, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    rng = np.random.RandomState(seed)
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab, size=(batch, seq)), jnp.int32)
+    out = {"tokens": tokens}
+    if shape_kind == "train":
+        out["labels"] = tokens
+    if cfg.frontend == "patches":
+        out["patches"] = jnp.asarray(rng.randn(batch, cfg.frontend_len, cfg.d_model) * 0.1, jnp.dtype(cfg.dtype))
+    if cfg.frontend == "frames":
+        out["frames"] = jnp.asarray(rng.randn(batch, seq, cfg.d_model) * 0.1, jnp.dtype(cfg.dtype))
+    return out

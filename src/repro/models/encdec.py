@@ -1,0 +1,133 @@
+"""Encoder-decoder (seamless-m4t backbone): encoder over stub frame
+embeddings, decoder over text with cross-attention.  Both stacks scanned."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.attention import attention, attn_init, init_kv_cache
+from ..nn.core import (
+    Params, apply_norm, embed_init, embed_lookup, mlp_apply, mlp_init,
+    norm_init, param_dtype, softmax_xent, unembed,
+)
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "ln2": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "self_attn": attn_init(k1, cfg, dtype),
+        "ln_x": norm_init(cfg.d_model, cfg.norm, dtype),
+        "cross_attn": attn_init(k2, cfg, dtype),
+        "ln2": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def init_params(cfg, rng) -> Params:
+    dtype = param_dtype(cfg)
+    k_embed, k_enc, k_dec, k_out, k_fe = jax.random.split(rng, 5)
+    enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "frame_proj": embed_init(k_fe, cfg.d_model, cfg.d_model, dtype),
+        "encoder": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "decoder": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(dec_keys),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "unembed": embed_init(k_out, cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+def encode(p: Params, cfg, frames: jnp.ndarray, remat: bool = False) -> jnp.ndarray:
+    x = jnp.einsum("bsd,de->bse", frames.astype(p["frame_proj"].dtype), p["frame_proj"])
+
+    def body(carry, params_i):
+        h, _ = attention(params_i["attn"], apply_norm(params_i["ln1"], carry, cfg.norm),
+                         cfg, causal=False)
+        carry = carry + h
+        carry = carry + mlp_apply(params_i["mlp"], apply_norm(params_i["ln2"], carry, cfg.norm), cfg.act)
+        return carry, 0.0
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, p["encoder"])
+    return apply_norm(p["enc_norm"], x, cfg.norm)
+
+
+def _dec_block(params_i, x, cfg, memory, cache):
+    h, new_cache = attention(params_i["self_attn"], apply_norm(params_i["ln1"], x, cfg.norm),
+                             cfg, causal=True, cache=cache)
+    x = x + h
+    h, _ = attention(params_i["cross_attn"], apply_norm(params_i["ln_x"], x, cfg.norm),
+                     cfg, memory=memory, causal=False)
+    x = x + h
+    x = x + mlp_apply(params_i["mlp"], apply_norm(params_i["ln2"], x, cfg.norm), cfg.act)
+    return x, new_cache
+
+
+def decode_stack(p: Params, cfg, x, memory, caches=None, remat: bool = False):
+    def body(carry, layer):
+        params_i, cache_i = layer
+        out, new_cache = _dec_block(params_i, carry, cfg, memory, cache_i)
+        return out, new_cache
+
+    if remat:
+        body = jax.checkpoint(body)
+    if caches is None:
+        def body_nc(carry, params_i):
+            out, _ = _dec_block(params_i, carry, cfg, memory, None)
+            return out, 0.0
+        if remat:
+            body_nc = jax.checkpoint(body_nc)
+        x, _ = jax.lax.scan(body_nc, x, p["decoder"])
+        return x, None
+    x, new_caches = jax.lax.scan(body, x, (p["decoder"], caches))
+    return x, new_caches
+
+
+def _logits(p, cfg, x):
+    x = apply_norm(p["final_norm"], x, cfg.norm)
+    return unembed(x, p["unembed"], False)
+
+
+def loss_fn(p: Params, cfg, batch, remat: bool = True):
+    memory = encode(p, cfg, batch["frames"], remat=remat)
+    x = embed_lookup(p["embed"], batch["tokens"])
+    x, _ = decode_stack(p, cfg, x, memory, None, remat=remat)
+    logits = _logits(p, cfg, x)
+    loss = softmax_xent(logits[:, :-1], batch["labels"][:, 1:], cfg.vocab)
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> Any:
+    one = init_kv_cache(cfg, batch, max_len, dtype)
+    kv = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one)
+    return {"kv": kv, "memory": None}
+
+
+def prefill(p: Params, cfg, batch, cache):
+    """Runs the encoder on frames and prefills the decoder with tokens."""
+    memory = encode(p, cfg, batch["frames"])
+    x = embed_lookup(p["embed"], batch["tokens"])
+    x, new_kv = decode_stack(p, cfg, x, memory, cache["kv"])
+    return _logits(p, cfg, x[:, -1:]), {"kv": new_kv, "memory": memory}
+
+
+def decode_step(p: Params, cfg, cache, tokens):
+    x = embed_lookup(p["embed"], tokens)
+    x, new_kv = decode_stack(p, cfg, x, cache["memory"], cache["kv"])
+    return _logits(p, cfg, x), {"kv": new_kv, "memory": cache["memory"]}

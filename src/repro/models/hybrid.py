@@ -1,0 +1,120 @@
+"""Zamba2-style hybrid: Mamba2 backbone with one *shared* transformer
+block (attention + MLP, weights shared) applied before every group of
+``shared_attn_every`` mamba layers — each application has its own KV
+cache (9 applications for 54 layers / 6)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.attention import attention, attn_init, init_kv_cache
+from ..nn.core import (
+    Params, apply_norm, embed_init, embed_lookup, mlp_apply, mlp_init,
+    norm_init, param_dtype, softmax_xent, unembed,
+)
+from ..nn.ssm import mamba2_apply, mamba2_init, mamba2_init_state
+
+
+def _n_groups(cfg) -> int:
+    k = cfg.hybrid.shared_attn_every
+    return (cfg.n_layers + k - 1) // k
+
+
+def init_params(cfg, rng) -> Params:
+    dtype = param_dtype(cfg)
+    k_embed, k_shared, k_mamba, k_out = jax.random.split(rng, 4)
+    groups = _n_groups(cfg)
+    per_group = cfg.hybrid.shared_attn_every
+    keys = jax.random.split(k_mamba, groups * per_group).reshape(groups, per_group, 2)
+    mamba = jax.vmap(jax.vmap(lambda k: mamba2_init(k, cfg, dtype)))(keys)
+    ks = jax.random.split(k_shared, 3)
+    shared = {
+        "ln1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn_init(ks[0], cfg, dtype),
+        "ln2": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+    return {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "mamba": mamba,
+        "shared": shared,
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "unembed": embed_init(k_out, cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+def _shared_block(p: Params, x, cfg, cache):
+    h, new_cache = attention(p["attn"], apply_norm(p["ln1"], x, cfg.norm),
+                             cfg, causal=True, cache=cache)
+    x = x + h
+    x = x + mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg.norm), cfg.act)
+    return x, new_cache
+
+
+def _forward(p: Params, cfg, x, caches=None, remat: bool = False):
+    shared = p["shared"]
+
+    def group_body(carry, layer):
+        xc = carry
+        mamba_i, cache_i = layer
+        attn_cache = cache_i["attn"] if cache_i is not None else None
+        xc, new_attn = _shared_block(shared, xc, cfg, attn_cache)
+
+        def mamba_body(c2, layer2):
+            params_j, st_j = layer2
+            out, new_st = mamba2_apply(params_j, c2, cfg, state=st_j)
+            return out, new_st
+
+        if cache_i is None:
+            def mamba_nc(c2, params_j):
+                out, _ = mamba2_apply(params_j, c2, cfg, state=None)
+                return out, 0.0
+            xc, _ = jax.lax.scan(mamba_nc, xc, mamba_i)
+            return xc, 0.0
+        xc, new_states = jax.lax.scan(mamba_body, xc, (mamba_i, cache_i["mamba"]))
+        return xc, {"attn": new_attn, "mamba": new_states}
+
+    if remat:
+        group_body = jax.checkpoint(group_body)
+    if caches is None:
+        x, _ = jax.lax.scan(lambda c, m: group_body(c, (m, None)), x, p["mamba"])
+        return x, None
+    x, new_caches = jax.lax.scan(group_body, x, (p["mamba"], caches))
+    return x, new_caches
+
+
+def _logits(p, cfg, x):
+    x = apply_norm(p["final_norm"], x, cfg.norm)
+    return unembed(x, p["unembed"], False)
+
+
+def loss_fn(p: Params, cfg, batch, remat: bool = True):
+    x = embed_lookup(p["embed"], batch["tokens"])
+    x, _ = _forward(p, cfg, x, None, remat=remat)
+    logits = _logits(p, cfg, x)
+    loss = softmax_xent(logits[:, :-1], batch["labels"][:, 1:], cfg.vocab)
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> Any:
+    groups = _n_groups(cfg)
+    per_group = cfg.hybrid.shared_attn_every
+    attn = init_kv_cache(cfg, batch, max_len, dtype)
+    attn = jax.tree.map(lambda a: jnp.broadcast_to(a, (groups, *a.shape)), attn)
+    mst = mamba2_init_state(cfg, batch, dtype)
+    mst = jax.tree.map(lambda a: jnp.broadcast_to(a, (groups, per_group, *a.shape)), mst)
+    return {"attn": attn, "mamba": mst}
+
+
+def prefill(p: Params, cfg, batch, cache):
+    x = embed_lookup(p["embed"], batch["tokens"])
+    x, new_caches = _forward(p, cfg, x, cache)
+    return _logits(p, cfg, x[:, -1:]), new_caches
+
+
+def decode_step(p: Params, cfg, cache, tokens):
+    x = embed_lookup(p["embed"], tokens)
+    x, new_caches = _forward(p, cfg, x, cache)
+    return _logits(p, cfg, x), new_caches

@@ -1,0 +1,145 @@
+"""Decoder-only LM covering the dense, moe, and vlm families.
+
+Layers are scanned (``jax.lax.scan`` over stacked per-layer params) so the
+compiled HLO stays one-layer-sized for 32-48 layer configs; training wraps
+the body in ``jax.checkpoint`` (full remat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.attention import attention, attn_init, init_kv_cache
+from ..nn.core import (
+    Params,
+    apply_norm,
+    embed_init,
+    embed_lookup,
+    mlp_apply,
+    mlp_init,
+    norm_init,
+    param_dtype,
+    softmax_xent,
+    unembed,
+)
+from ..nn.moe import moe_apply, moe_init
+
+
+def block_init(key, cfg, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "ln2": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if cfg.moe:
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def block_apply(p: Params, x: jnp.ndarray, cfg, cache=None):
+    h, new_cache = attention(p["attn"], apply_norm(p["ln1"], x, cfg.norm), cfg,
+                             causal=True, cache=cache)
+    x = x + h
+    if cfg.moe:
+        h2, aux = moe_apply(p["moe"], apply_norm(p["ln2"], x, cfg.norm), cfg)
+    else:
+        h2 = mlp_apply(p["mlp"], apply_norm(p["ln2"], x, cfg.norm), cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+    return x + h2, new_cache, aux
+
+
+def init_params(cfg, rng) -> Params:
+    dtype = param_dtype(cfg)
+    k_embed, k_blocks, k_out, k_fe = jax.random.split(rng, 4)
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: block_init(k, cfg, dtype))(keys)
+    p = {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = embed_init(k_out, cfg.d_model, cfg.padded_vocab, dtype)
+    if cfg.frontend == "patches":
+        # stub frontend: a learned projection applied to precomputed patch
+        # embeddings (the assignment: modality frontend is a stub)
+        p["patch_proj"] = embed_init(k_fe, cfg.d_model, cfg.d_model, dtype)
+    return p
+
+
+def _stack(p: Params, x: jnp.ndarray, cfg, caches=None, remat: bool = False):
+    from ..parallel.constrain import constrain
+
+    def body(carry, layer):
+        xc = constrain(carry, ("pod", "data"), None, None)
+        params_i, cache_i = layer
+        out, new_cache, aux = block_apply(params_i, xc, cfg, cache_i)
+        return out, (new_cache, aux)
+
+    if remat:
+        body = jax.checkpoint(body)
+    if caches is None:
+        def body_nc(carry, params_i):
+            carry = constrain(carry, ("pod", "data"), None, None)
+            out, _, aux = block_apply(params_i, carry, cfg, None)
+            return out, aux
+        if remat:
+            body_nc = jax.checkpoint(body_nc)
+        x, auxs = jax.lax.scan(body_nc, x, p["blocks"])
+        return x, None, jnp.sum(auxs)
+    x, (new_caches, auxs) = jax.lax.scan(body, x, (p["blocks"], caches))
+    return x, new_caches, jnp.sum(auxs)
+
+
+def _embed_inputs(p: Params, cfg, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    from ..parallel.constrain import constrain
+
+    x = embed_lookup(p["embed"], batch["tokens"])
+    if cfg.frontend == "patches" and "patches" in batch:
+        pe = jnp.einsum("bpd,de->bpe", batch["patches"].astype(x.dtype), p["patch_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    # keep activations batch-sharded through the stack (GSPMD otherwise
+    # replicates the vocab-sharded gather output before re-partitioning)
+    return constrain(x, ("pod", "data"), None, None)
+
+
+def _logits(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    x = apply_norm(p["final_norm"], x, cfg.norm)
+    w = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    return unembed(x, w, cfg.tie_embeddings)
+
+
+def loss_fn(p: Params, cfg, batch: Dict[str, jnp.ndarray], remat: bool = True):
+    x = _embed_inputs(p, cfg, batch)
+    x, _, aux = _stack(p, x, cfg, None, remat=remat)
+    if cfg.frontend == "patches" and "patches" in batch:
+        x = x[:, batch["patches"].shape[1]:]  # loss on text positions only
+    logits = _logits(p, cfg, x)
+    loss = softmax_xent(logits[:, :-1], batch["labels"][:, 1:], cfg.vocab)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> Any:
+    one = init_kv_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one)
+
+
+def prefill(p: Params, cfg, batch: Dict[str, jnp.ndarray], cache):
+    x = _embed_inputs(p, cfg, batch)
+    x, new_caches, _ = _stack(p, x, cfg, cache)
+    logits = _logits(p, cfg, x[:, -1:])
+    return logits, new_caches
+
+
+def decode_step(p: Params, cfg, cache, tokens: jnp.ndarray):
+    """tokens: (B, 1)."""
+    x = embed_lookup(p["embed"], tokens)
+    x, new_caches, _ = _stack(p, x, cfg, cache)
+    return _logits(p, cfg, x), new_caches

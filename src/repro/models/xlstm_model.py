@@ -1,0 +1,89 @@
+"""xLSTM LM: mixed mLSTM/sLSTM residual blocks (unrolled — 12 layers)."""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.core import (
+    Params, apply_norm, embed_init, embed_lookup, norm_init, param_dtype,
+    softmax_xent, unembed,
+)
+from ..nn.xlstm import (
+    mlstm_block_apply, mlstm_block_init, mlstm_init_state,
+    slstm_block_apply, slstm_block_init, slstm_init_state,
+)
+
+
+def _kinds(cfg) -> List[str]:
+    return ["slstm" if i in cfg.xlstm.slstm_at else "mlstm" for i in range(cfg.n_layers)]
+
+
+def init_params(cfg, rng) -> Params:
+    dtype = param_dtype(cfg)
+    keys = jax.random.split(rng, cfg.n_layers + 2)
+    p: Params = {"embed": embed_init(keys[-1], cfg.padded_vocab, cfg.d_model, dtype),
+                 "final_norm": norm_init(cfg.d_model, cfg.norm, dtype)}
+    for i, kind in enumerate(_kinds(cfg)):
+        init = mlstm_block_init if kind == "mlstm" else slstm_block_init
+        p[f"layer_{i}"] = {
+            "ln": norm_init(cfg.d_model, cfg.norm, dtype),
+            "core": init(keys[i], cfg, dtype),
+        }
+    return p
+
+
+def _forward(p: Params, cfg, x, states: Optional[List] = None, remat: bool = False):
+    new_states: List = []
+    for i, kind in enumerate(_kinds(cfg)):
+        lp = p[f"layer_{i}"]
+        st = states[i] if states is not None else None
+        xin = apply_norm(lp["ln"], x, cfg.norm)
+
+        def run(core, xin, st, kind=kind):
+            fn = mlstm_block_apply if kind == "mlstm" else slstm_block_apply
+            return fn(core, xin, cfg, state=st) if kind == "slstm" else fn(core, xin, cfg, state=st)
+
+        if remat:
+            out, new_st = jax.checkpoint(lambda c, xi, s: run(c, xi, s), static_argnums=())(lp["core"], xin, st)
+        else:
+            out, new_st = run(lp["core"], xin, st)
+        x = x + out
+        new_states.append(new_st)
+    return x, (new_states if states is not None else None)
+
+
+def _logits(p, cfg, x):
+    x = apply_norm(p["final_norm"], x, cfg.norm)
+    return unembed(x, p["embed"], True)
+
+
+def loss_fn(p: Params, cfg, batch, remat: bool = True):
+    x = embed_lookup(p["embed"], batch["tokens"])
+    x, _ = _forward(p, cfg, x, None, remat=remat)
+    logits = _logits(p, cfg, x)
+    loss = softmax_xent(logits[:, :-1], batch["labels"][:, 1:], cfg.vocab)
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> Any:
+    out = []
+    for kind in _kinds(cfg):
+        if kind == "mlstm":
+            out.append(mlstm_init_state(cfg, batch, dtype))
+        else:
+            out.append(slstm_init_state(cfg, batch))
+    return out
+
+
+def prefill(p: Params, cfg, batch, cache):
+    x = embed_lookup(p["embed"], batch["tokens"])
+    x, new_states = _forward(p, cfg, x, cache)
+    return _logits(p, cfg, x[:, -1:]), new_states
+
+
+def decode_step(p: Params, cfg, cache, tokens):
+    x = embed_lookup(p["embed"], tokens)
+    x, new_states = _forward(p, cfg, x, cache)
+    return _logits(p, cfg, x), new_states

@@ -1,0 +1,138 @@
+"""GQA attention with RoPE variants, qk-norm, KV caches, cross-attention,
+and selectable implementation (XLA einsum or the Pallas flash kernel)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core import Params, apply_rope, dense_init, linear, rms_head_norm
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype, cross: bool = False) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _split_heads(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: (B,S,H,hd), k: (B,T,KV,hd) -> (B,H,S,T) without materializing the
+    repeated KV heads (grouped einsum)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    out = jnp.einsum("bskgd,btkd->bkgst", qg, k)
+    return out.reshape(b, h, s, k.shape[1])
+
+
+def _gqa_values(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """p: (B,H,S,T), v: (B,T,KV,hd) -> (B,S,H,hd)."""
+    b, h, s, t = p.shape
+    kvh = v.shape[2]
+    g = h // kvh
+    pg = p.reshape(b, kvh, g, s, t)
+    out = jnp.einsum("bkgst,btkd->bskgd", pg, v)
+    return out.reshape(b, s, h, out.shape[-1])
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+        mask: Optional[jnp.ndarray], sm_scale: float) -> jnp.ndarray:
+    """Reference attention used for training.  q: (B,S,H,hd); k/v:
+    (B,T,KV,hd); mask broadcastable to (B,1,S,T) (True = attend)."""
+    scores = _gqa_scores(q.astype(jnp.float32), k.astype(jnp.float32)) * sm_scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_values(p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def causal_mask(s: int, dtype=bool) -> jnp.ndarray:
+    return jnp.tril(jnp.ones((s, s), bool))[None, None]
+
+
+def attention(p: Params, x: jnp.ndarray, cfg, *,
+              positions: Optional[jnp.ndarray] = None,
+              mask: Optional[jnp.ndarray] = None,
+              causal: bool = True,
+              cache: Optional[Dict[str, jnp.ndarray]] = None,
+              memory: Optional[jnp.ndarray] = None,
+              impl: str = "xla") -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Self- or cross-attention.
+
+    * training/prefill: ``cache=None`` (or fresh) — full sequence.
+    * decode: ``cache`` holds (k, v, pos); x is (B, 1, D).
+    * cross-attention: ``memory`` is the encoder output; k/v come from it.
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    sm_scale = 1.0 / np.sqrt(hd)
+
+    q = _split_heads(linear(x, p["wq"]), h)
+    kv_src = memory if memory is not None else x
+    k = _split_heads(linear(kv_src, p["wk"]), kvh)
+    v = _split_heads(linear(kv_src, p["wv"]), kvh)
+
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"])
+        k = rms_head_norm(k, p["k_norm"])
+
+    if memory is None:  # self-attention: rope + cache
+        if positions is None:
+            if cache is not None and "pos" in cache:
+                positions = cache["pos"] + jnp.arange(s, dtype=jnp.int32)[None]
+            else:
+                positions = jnp.arange(s, dtype=jnp.int32)[None]
+        q = apply_rope(q, positions, cfg.rope, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope, cfg.rope_theta)
+
+        if cache is not None:
+            pos = cache["pos"]  # scalar int32: current length
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            t = ck.shape[1]
+            kpos = jnp.arange(t, dtype=jnp.int32)
+            valid = kpos[None, None, None, :] < (pos + s)
+            if causal and s > 1:
+                qpos = pos + jnp.arange(s, dtype=jnp.int32)
+                valid = valid & (kpos[None, None, None, :] <= qpos[None, None, :, None])
+            out = mha(q, ck, cv, valid, sm_scale)
+            new_cache = {"k": ck, "v": cv, "pos": pos + s}
+            return linear(out.reshape(b, s, h * hd), p["wo"]), new_cache
+
+        m = mask
+        if causal and m is None:
+            m = causal_mask(s)
+        out = mha(q, k, v, m, sm_scale)
+        return linear(out.reshape(b, s, h * hd), p["wo"]), None
+
+    # cross attention (no rope on kv, no cache mutation needed beyond reuse)
+    out = mha(q, k, v, mask, sm_scale)
+    return linear(out.reshape(b, s, h * hd), p["wo"]), None
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,77 @@
+"""Differentiable chunked gated-linear-attention in pure jnp (scan over
+chunks) — the training-path twin of the mlstm_chunk/ssd_chunk Pallas
+kernels (identical math; validated against the same sequential oracle)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla_jnp(q, k, v, log_decay, gain, chunk: int = 256,
+                    normalize: bool = True, scale: float = 1.0) -> jnp.ndarray:
+    """q/k: (B,H,S,Dk); v: (B,H,S,Dv); log_decay/gain: (B,H,S)."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n = s // chunk
+    bh = b * h
+
+    def seg(x, dlast):
+        return x.reshape(bh, n, chunk, dlast).swapaxes(0, 1)  # (n, bh, L, d)
+
+    qs = seg(q.astype(jnp.float32) * scale, dk)
+    ks = seg(k.astype(jnp.float32), dk)
+    vs = seg(v.astype(jnp.float32), dv)
+    lds = log_decay.reshape(bh, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+    gs = gain.reshape(bh, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+
+    tril = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def step(carry, xs):
+        C, nvec = carry                      # (bh, dk, dv), (bh, dk)
+        qc, kc, vc, ldc, gc = xs
+        cum = jnp.cumsum(ldc, axis=-1)       # (bh, L)
+        # mask inside the exp (upper triangle would overflow: inf*0=NaN)
+        dmat = jnp.where(tril[None] > 0, cum[:, :, None] - cum[:, None, :], -jnp.inf)
+        scores = jnp.einsum("btd,bsd->bts", qc, kc) * jnp.exp(dmat) * gc[:, None, :]
+        h_intra = jnp.einsum("bts,bsp->btp", scores, vc)
+        ecum = jnp.exp(cum)
+        h_inter = ecum[:, :, None] * jnp.einsum("btd,bdp->btp", qc, C)
+        out = h_intra + h_inter
+        if normalize:
+            norm = jnp.sum(scores, axis=-1) + ecum * jnp.einsum("btd,bd->bt", qc, nvec)
+            out = out / jnp.maximum(jnp.abs(norm), 1.0)[..., None]
+        total = cum[:, -1]
+        w = jnp.exp(total[:, None] - cum) * gc
+        kw = kc * w[..., None]
+        C = jnp.exp(total)[:, None, None] * C + jnp.einsum("bsd,bsp->bdp", kw, vc)
+        nvec = jnp.exp(total)[:, None] * nvec + jnp.sum(kw, axis=1)
+        return (C, nvec), out
+
+    C0 = jnp.zeros((bh, dk, dv), jnp.float32)
+    n0 = jnp.zeros((bh, dk), jnp.float32)
+    (_, _), outs = jax.lax.scan(step, (C0, n0), (qs, ks, vs, lds, gs))
+    out = outs.swapaxes(0, 1).reshape(b, h, s, dv)
+    return out.astype(q.dtype)
+
+
+def gla_decode_step(q, k, v, log_decay, gain, state: Tuple[jnp.ndarray, jnp.ndarray],
+                    normalize: bool = True, scale: float = 1.0):
+    """Single-token state update.  q/k: (B,H,Dk); v: (B,H,Dv);
+    log_decay/gain: (B,H); state: (C (B,H,Dk,Dv), n (B,H,Dk))."""
+    C, nvec = state
+    dec = jnp.exp(log_decay.astype(jnp.float32))[..., None, None]
+    g = gain.astype(jnp.float32)[..., None, None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = dec * C + g * (kf[..., :, None] * vf[..., None, :])
+    nvec = dec[..., 0] * nvec + g[..., 0] * kf
+    qf = q.astype(jnp.float32) * scale
+    out = jnp.einsum("bhd,bhdp->bhp", qf, C)
+    if normalize:
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, nvec)), 1.0)
+        out = out / denom[..., None]
+    return out.astype(q.dtype), (C, nvec)

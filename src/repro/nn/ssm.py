@@ -1,0 +1,118 @@
+"""Mamba2 (SSD) block with train (chunked), prefill, and single-step
+decode paths."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core import Params, causal_conv1d, dense_init, linear
+from .scan_ops import chunked_gla_jnp, gla_decode_step
+
+
+def mamba2_dims(cfg):
+    inner = cfg.ssm.expand * cfg.d_model
+    n_heads = inner // cfg.ssm.head_dim
+    return inner, n_heads, cfg.ssm.d_state
+
+
+def mamba2_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    inner, nh, ns = mamba2_dims(cfg)
+    conv_ch = inner + 2 * ns
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * inner + 2 * ns + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_width, conv_ch), jnp.float32) * 0.2).astype(dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": dense_init(ks[2], inner, d, dtype),
+        "norm_scale": jnp.ones((inner,), dtype),
+    }
+
+
+def _gated_rmsnorm(x, z, scale, eps=1e-6):
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    nrm = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (xf * nrm * scale.astype(jnp.float32)).astype(z.dtype)
+
+
+def _project(p, x, cfg):
+    inner, nh, ns = mamba2_dims(cfg)
+    zxbcdt = linear(x, p["in_proj"])
+    z, xin, B, C, dt = jnp.split(zxbcdt, [inner, 2 * inner, 2 * inner + ns, 2 * inner + 2 * ns], axis=-1)
+    return z, xin, B, C, dt
+
+
+def mamba2_apply(p: Params, x: jnp.ndarray, cfg, chunk: int = 256,
+                 state: Optional[Dict[str, jnp.ndarray]] = None
+                 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """x: (B, S, D).  With ``state`` given, updates it (prefill->decode)."""
+    b, s, d = x.shape
+    inner, nh, ns = mamba2_dims(cfg)
+    hd = cfg.ssm.head_dim
+    z, xin, B, C, dt = _project(p, x, cfg)
+
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = causal_conv1d(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, B, C = jnp.split(conv_out, [inner, inner + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                           # (nh,)
+
+    xh = xin.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)               # (B,nh,S,hd)
+    Bh = jnp.broadcast_to(B[:, None], (b, nh, s, ns))
+    Ch = jnp.broadcast_to(C[:, None], (b, nh, s, ns))
+    dth = dt.transpose(0, 2, 1)                                        # (B,nh,S)
+    log_decay = dth * A[None, :, None]
+
+    if state is None or s > 1:
+        y = chunked_gla_jnp(Ch, Bh, xh, log_decay, dth, chunk=chunk, normalize=False)
+        new_ssm = None
+        if state is not None:
+            # prefill: also materialize the final state via a scan pass
+            _, st = _final_state(Ch, Bh, xh, log_decay, dth)
+            new_ssm = st
+    else:
+        y, st = gla_decode_step(
+            Ch[:, :, 0], Bh[:, :, 0], xh[:, :, 0], log_decay[:, :, 0], dth[:, :, 0],
+            (state["C"], state["n"]), normalize=False)
+        y = y[:, :, None, :]
+        new_ssm = (state["C"] * 0 + st[0], st[1])
+
+    y = (y + p["D"][None, :, None, None] * xh).astype(x.dtype)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, inner)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = linear(y, p["out_proj"])
+    if state is None:
+        return out, None
+    new_state = {"conv": new_conv, "C": new_ssm[0], "n": new_ssm[1]}
+    return out, new_state
+
+
+def _final_state(q, k, v, log_decay, gain):
+    """Compute the end-of-sequence recurrent state (for prefill)."""
+    b, h, s, dk = k.shape
+    dv = v.shape[-1]
+    cum = jnp.cumsum(log_decay.astype(jnp.float32), axis=-1)
+    total = cum[..., -1]
+    w = jnp.exp(total[..., None] - cum) * gain
+    kw = k.astype(jnp.float32) * w[..., None]
+    C = jnp.einsum("bhsd,bhsp->bhdp", kw, v.astype(jnp.float32))
+    n = jnp.sum(kw, axis=2)
+    return None, (C, n)
+
+
+def mamba2_init_state(cfg, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    inner, nh, ns = mamba2_dims(cfg)
+    conv_ch = inner + 2 * ns
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_ch), dtype),
+        "C": jnp.zeros((batch, nh, ns, cfg.ssm.head_dim), jnp.float32),
+        "n": jnp.zeros((batch, nh, ns), jnp.float32),
+    }

@@ -1,0 +1,158 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan with exponential-gate stabilization)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core import Params, causal_conv1d, dense_init, linear
+from .scan_ops import chunked_gla_jnp, gla_decode_step
+
+
+# ---------------------------------------------------------------- mLSTM
+def mlstm_dims(cfg):
+    inner = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    nh = cfg.xlstm.n_heads
+    hd = inner // nh
+    return inner, nh, hd
+
+
+def mlstm_block_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    inner, nh, hd = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.xlstm.conv_width, inner), jnp.float32) * 0.2).astype(dtype),
+        "wq": dense_init(ks[2], inner, inner, dtype),
+        "wk": dense_init(ks[3], inner, inner, dtype),
+        "wv": dense_init(ks[4], inner, inner, dtype),
+        "w_igate": dense_init(ks[5], inner, nh, jnp.float32, scale=0.01),
+        "w_fgate": dense_init(ks[6], inner, nh, jnp.float32, scale=0.01),
+        "b_igate": jnp.zeros((nh,), jnp.float32),
+        "b_fgate": jnp.full((nh,), 3.0, jnp.float32),  # init: mostly remember
+        "skip_scale": jnp.ones((inner,), dtype),
+        "down_proj": dense_init(ks[7], inner, d, dtype),
+    }
+
+
+def mlstm_block_apply(p: Params, x: jnp.ndarray, cfg, chunk: int = 256,
+                      state: Optional[Dict[str, jnp.ndarray]] = None):
+    b, s, d = x.shape
+    inner, nh, hd = mlstm_dims(cfg)
+    up = linear(x, p["up_proj"])
+    xin, z = jnp.split(up, 2, axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    cx, new_conv = causal_conv1d(xin, p["conv_w"], conv_state)
+    cx = jax.nn.silu(cx)
+
+    q = linear(cx, p["wq"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    k = linear(cx, p["wk"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    v = linear(xin, p["wv"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    ig = (jnp.einsum("bsi,ih->bsh", cx.astype(jnp.float32), p["w_igate"]) + p["b_igate"]).transpose(0, 2, 1)
+    fg = (jnp.einsum("bsi,ih->bsh", cx.astype(jnp.float32), p["w_fgate"]) + p["b_fgate"]).transpose(0, 2, 1)
+    log_decay = jax.nn.log_sigmoid(fg)
+    gain = jnp.exp(jnp.minimum(ig, 8.0))
+    scale = float(hd) ** -0.5
+
+    new_state = None
+    if state is None or s > 1:
+        h = chunked_gla_jnp(q, k, v, log_decay, gain, chunk=chunk, normalize=True, scale=scale)
+        if state is not None:
+            from .ssm import _final_state
+
+            _, st = _final_state(q, k, v, log_decay, gain)
+            new_state = {"conv": new_conv, "C": st[0], "n": st[1]}
+    else:
+        h, st = gla_decode_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                log_decay[:, :, 0], gain[:, :, 0],
+                                (state["C"], state["n"]), normalize=True, scale=scale)
+        h = h[:, :, None, :]
+        new_state = {"conv": new_conv, "C": st[0], "n": st[1]}
+
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, inner)
+    h = h + p["skip_scale"] * cx
+    h = h * jax.nn.silu(z)
+    return linear(h, p["down_proj"]), new_state
+
+
+def mlstm_init_state(cfg, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    inner, nh, hd = mlstm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_width - 1, inner), dtype),
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------- sLSTM
+def slstm_block_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    nh = cfg.xlstm.n_heads
+    hd = d // nh
+    pf = cfg.xlstm.proj_factor_slstm
+    dff = int(pf * d)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),            # i,f,z,o
+        "r_gates": (jax.random.normal(ks[1], (nh, hd, 4 * hd), jnp.float32) / np.sqrt(hd)).astype(dtype),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "w_up": dense_init(ks[2], d, 2 * dff, dtype),
+        "w_down": dense_init(ks[3], dff, d, dtype),
+    }
+
+
+def slstm_block_apply(p: Params, x: jnp.ndarray, cfg,
+                      state: Optional[Dict[str, jnp.ndarray]] = None):
+    """Sequential sLSTM with exponential gating and max-stabilizer."""
+    b, s, d = x.shape
+    nh = cfg.xlstm.n_heads
+    hd = d // nh
+    wx = (linear(x, p["w_gates"]) + p["b_gates"]).astype(jnp.float32)  # (b,s,4d)
+    wx = wx.reshape(b, s, 4, nh, hd)
+
+    if state is None:
+        h0 = jnp.zeros((b, nh, hd), jnp.float32)
+        c0 = jnp.zeros((b, nh, hd), jnp.float32)
+        n0 = jnp.ones((b, nh, hd), jnp.float32)
+        m0 = jnp.zeros((b, nh, hd), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+
+    r = p["r_gates"].astype(jnp.float32)  # (nh, hd, 4hd)
+
+    def step(carry, wx_t):
+        h, c, n, m = carry
+        rec = jnp.einsum("bhd,hdk->bhk", h, r).reshape(b, nh, 4, hd).transpose(0, 2, 1, 3)
+        g = wx_t + rec                       # (b,4,nh,hd)
+        gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        logf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(logf + m, gi)
+        i_p = jnp.exp(gi - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(gz)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    wxs = jnp.moveaxis(wx, 1, 0)  # (s,b,4,nh,hd)
+    (hT, cT, nT, mT), hs = jax.lax.scan(step, (h0, c0, n0, m0), wxs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+
+    # GLU FFN (proj factor 4/3)
+    up = linear(h, p["w_up"])
+    a, g2 = jnp.split(up, 2, axis=-1)
+    out = linear(jax.nn.gelu(a, approximate=True) * g2, p["w_down"])
+    new_state = {"h": hT, "c": cT, "n": nT, "m": mT} if state is not None else None
+    return out, new_state
+
+
+def slstm_init_state(cfg, batch: int) -> Dict[str, jnp.ndarray]:
+    nh = cfg.xlstm.n_heads
+    hd = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.ones_like(z), "m": z}

@@ -1,0 +1,89 @@
+"""ZeRO-1: optimizer-state sharding over the data-parallel axis.
+
+Inside ``shard_map`` over the 'data' axis:
+  1. grads are reduce-scattered (each rank owns 1/N of every gradient),
+  2. the AdamW update runs on the owned shard only (m/v sharded),
+  3. updated param shards are all-gathered.
+
+Memory: optimizer state drops from 8 bytes/param to 8/N bytes/param per
+replica; collective volume is identical to a plain all-reduce
+(reduce-scatter + all-gather).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import adamw
+
+
+def _flat_size(x: jnp.ndarray) -> int:
+    n = 1
+    for s in x.shape:
+        n *= s
+    return n
+
+
+def zero1_update(params: Any, grads: Any, state: Dict[str, Any],
+                 cfg: adamw.AdamWConfig, axis: str = "data") -> Tuple[Any, Dict[str, Any], Dict]:
+    """Per-shard update — call inside shard_map with params/grads replicated
+    on ``axis`` and opt state sharded (leading dim = shard)."""
+    n = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+
+    def rs(g):
+        flat = g.reshape(-1).astype(jnp.float32)
+        pad = (-flat.size) % n
+        flat = jnp.pad(flat, (0, pad))
+        return jax.lax.psum_scatter(flat.reshape(n, -1), axis, scatter_dimension=0, tiled=False)
+
+    g_shards = jax.tree.map(rs, grads)
+
+    step = state["step"] + 1
+    gnorm_sq_local = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g_shards))
+    gnorm = jnp.sqrt(jax.lax.psum(gnorm_sq_local, axis))
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = adamw.lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        flat = p.reshape(-1).astype(jnp.float32)
+        pad = (-flat.size) % n
+        flat = jnp.pad(flat, (0, pad)).reshape(n, -1)
+        p_shard = jax.lax.dynamic_index_in_dim(flat, idx, 0, keepdims=False)
+        g = g * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        delta = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + cfg.eps) + cfg.weight_decay * p_shard
+        new_shard = p_shard - lr * delta
+        full = jax.lax.all_gather(new_shard, axis, tiled=True)
+        return full[: _flat_size(p)].reshape(p.shape).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(g_shards)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+def zero1_init_state(params: Any, n_shards: int) -> Dict[str, Any]:
+    """Sharded m/v as *global* flat arrays of size n*ceil(|p|/n) — shard
+    them with ``P('data')`` so each rank holds its ceil(|p|/n) slice."""
+    def shard_zeros(p):
+        size = _flat_size(p)
+        per = -(-size // n_shards)
+        return jnp.zeros((n_shards * per,), jnp.float32)
+
+    return {
+        "m": jax.tree.map(shard_zeros, params),
+        "v": jax.tree.map(shard_zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }

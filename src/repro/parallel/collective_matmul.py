@@ -1,0 +1,92 @@
+"""Overlapped collective matmul (ring all-gather matmul).
+
+TP matmul x @ W with W sharded on its input dim normally requires
+all-gather(x-shard) *then* matmul — serializing communication and
+compute.  The ring formulation interleaves them: at each of N steps,
+multiply the chunk currently held while ``collective_permute``-ing the
+next chunk around the ring, hiding (N-1)/N of the transfer behind MXU
+work.  This is the classic "collective matmul" (Wang et al.) used by
+MaxText; here it is the beyond-paper optimization for Stripe's partition
+pass output (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_allgather_matmul(x_shard: jnp.ndarray, w: jnp.ndarray,
+                          axis: str = "model") -> jnp.ndarray:
+    """Sequence/batch-parallel -> column-parallel matmul with all-gather
+    overlap, inside shard_map.
+
+    x_shard: (M/N, K) — x sharded on rows over ``axis``;
+    w:       (K, F_local) — this rank's column shard of W (full K).
+    Returns (M, F_local): every rank's output for ALL rows — the x chunks
+    travel a ring; at each step the chunk in hand is multiplied while the
+    next one is in flight (overlapping (N-1)/N of the gather).
+    """
+    n = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    m_loc, k = x_shard.shape
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    out = jnp.zeros((n * m_loc, w.shape[1]), x_shard.dtype)
+
+    def body(s, carry):
+        out, chunk = carry
+        src = (idx - s) % n  # originating rank of the chunk in hand
+        rows = (chunk @ w).astype(out.dtype)
+        out = jax.lax.dynamic_update_slice(out, rows, (src * m_loc, 0))
+        chunk = jax.lax.ppermute(chunk, axis, perm)
+        return out, chunk
+
+    out, _ = jax.lax.fori_loop(0, n, body, (out, x_shard))
+    return out
+
+
+def ring_matmul_reduce_scatter(x_shard: jnp.ndarray, w_shard: jnp.ndarray,
+                               axis: str = "model") -> jnp.ndarray:
+    """Row-parallel matmul with ring reduce-scatter overlap, inside
+    shard_map.
+
+    x_shard: (M, K/N) — activations sharded on K (as produced by a
+    preceding column-parallel layer); w_shard: (K/N, F) — W rows sharded.
+    Output: (M, F/N) — this rank's F-shard of x @ W.
+
+    The accumulator that finishes at rank r travels the ring; when it
+    visits rank q at step s, q adds its local partial for column block
+    ``(q + n-1 - s) mod n`` — one (M,K/N)x(K/N,F/N) matmul overlaps each
+    permute.
+    """
+    n = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    f = w_shard.shape[1]
+    assert f % n == 0
+    fc = f // n
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+
+    def w_cols(b):
+        return jax.lax.dynamic_slice_in_dim(w_shard, b * fc, fc, axis=1)
+
+    def partial_for(b):
+        return (x_shard.astype(jnp.float32) @ w_cols(b).astype(jnp.float32))
+
+    acc = partial_for((idx + n - 1) % n)
+
+    def body(s, acc):
+        acc = jax.lax.ppermute(acc, axis, fwd)
+        b = (idx + n - 1 - s) % n
+        return acc + partial_for(b)
+
+    acc = jax.lax.fori_loop(1, n, body, acc)
+    return acc.astype(x_shard.dtype)
+
+
+def allgather_matmul_baseline(x_shard: jnp.ndarray, w: jnp.ndarray,
+                              axis: str = "model") -> jnp.ndarray:
+    """Unoverlapped baseline: gather x fully, then one big matmul."""
+    x = jax.lax.all_gather(x_shard, axis, axis=0, tiled=True)
+    return x @ w

@@ -1,0 +1,61 @@
+"""Mesh-aware sharding constraints usable from model code.
+
+``constrain(x, 'model', None, ...)`` applies
+``jax.lax.with_sharding_constraint`` when tracing under a mesh whose axis
+names include the requested ones, and is a no-op otherwise (so the same
+model code runs in single-device smoke tests and in the 512-chip
+dry-run).  Axes whose size does not divide the dim are dropped.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _current_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:  # older path: physical mesh context
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def constrain(x, *axes):
+    """axes: one entry per dim — an axis name, a tuple of names, or None."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    sizes = dict(mesh.shape)
+    spec = []
+    for d, a in enumerate(axes):
+        if a is None:
+            spec.append(None)
+            continue
+        group = (a,) if isinstance(a, str) else tuple(a)
+        if not all(g in names for g in group):
+            spec.append(None)
+            continue
+        total = 1
+        for g in group:
+            total *= sizes[g]
+        if x.shape[d] % total != 0:
+            spec.append(None)
+            continue
+        spec.append(a if isinstance(a, str) else tuple(a))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

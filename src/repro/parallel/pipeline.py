@@ -1,0 +1,64 @@
+"""GPipe-style pipeline parallelism over a mesh axis (shard_map +
+collective_permute).
+
+The multi-pod mesh's 'pod' axis can run as a pipeline instead of pure DP
+(inter-pod links are the slowest, and PP moves only activations —
+microbatch boundary traffic — across them).  Schedule: GPipe with M
+microbatches; bubble fraction (S-1)/(M+S-1).
+
+``pipeline_apply`` runs ``stage_fn`` (this rank's stage params) over M
+microbatches: each step, ranks process their microbatch then permute
+activations forward.  Implemented with a rotating buffer so every rank
+executes the same program (SPMD).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def pipeline_apply(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+                   stage_params: Any, micro_in: jnp.ndarray,
+                   axis: str = "pod") -> jnp.ndarray:
+    """Inside shard_map over ``axis``.
+
+    micro_in: (M, mb, ...) — this *pipeline input* is only meaningful on
+    stage 0 (others receive via permute).  Returns (M, mb, ...) outputs,
+    meaningful on the last stage.
+    """
+    s = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    m = micro_in.shape[0]
+    total = m + s - 1
+    fwd = [(i, (i + 1) % s) for i in range(s)]
+
+    buf = jnp.zeros_like(micro_in[0])
+    outs = jnp.zeros_like(micro_in)
+
+    def body(t, carry):
+        buf, outs = carry
+        # stage 0 injects microbatch t (if in range); others use arrival
+        mb_idx = jnp.clip(t, 0, m - 1)
+        inject = jax.lax.dynamic_index_in_dim(micro_in, mb_idx, 0, keepdims=False)
+        x = jnp.where(idx == 0, inject, buf)
+        y = stage_fn(stage_params, x)
+        # last stage records its result for microbatch (t - (s-1))
+        out_idx = jnp.clip(t - (s - 1), 0, m - 1)
+        write = (idx == s - 1) & (t >= s - 1)
+        cur = jax.lax.dynamic_index_in_dim(outs, out_idx, 0, keepdims=False)
+        outs = jax.lax.dynamic_update_index_in_dim(
+            outs, jnp.where(write, y, cur), out_idx, 0)
+        buf = jax.lax.ppermute(y, axis, fwd)
+        return buf, outs
+
+    _, outs = jax.lax.fori_loop(0, total, body, (buf, outs))
+    # only the last stage wrote real outputs; psum broadcasts them (other
+    # ranks hold zeros), making the result replicated over the axis
+    return jax.lax.psum(outs, axis)
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)

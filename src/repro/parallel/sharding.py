@@ -1,0 +1,215 @@
+"""Sharding rules: pytree-path-based PartitionSpecs for params, optimizer
+state, batches, and caches.
+
+Strategy (GSPMD/pjit):
+
+* 2-D weights are fully sharded ``P('data', 'model')`` (FSDP-style: GSPMD
+  all-gathers the 'data' axis of a weight when it is consumed, which is
+  what keeps dbrx-132b's 264 GB of bf16 params at ~1 GB/chip on a 256-chip
+  pod);
+* TP follows Megatron: column-parallel in-projections shard their output
+  dim on 'model', row-parallel out-projections shard their input dim on
+  'model'; the embedding shards vocab on 'model';
+* MoE expert-stacked weights shard experts on 'model' (EP);
+* the extra multi-pod 'pod' axis is pure data parallelism: params are
+  replicated across pods, batches sharded;
+* batches shard batch on ('pod','data'); decode caches shard batch on
+  'data' when batch >= |data|, otherwise (long-context, batch=1) they
+  shard the *sequence* dimension on 'data' (sequence-parallel decode).
+
+This is where the Stripe partition pass's decision (bank = outer parallel
+index) meets the mesh: the pass picks the logical split; GSPMD executes it.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# last-dim-rule tables: rule applies to the trailing ndims of the leaf
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "up_proj", "in_proj", "w_gates"}
+_ROW_PARALLEL = {"wo", "w_down", "down_proj", "out_proj"}
+
+
+def _rule_for(path: Tuple[str, ...], leaf) -> Tuple[Optional[str], ...]:
+    name = path[-1] if path else ""
+    parent = path[-2] if len(path) >= 2 else ""
+    nd = leaf.ndim
+
+    if name in ("embed",):
+        # vocab over model, d replicated: fully sharding d over 'data' makes
+        # GSPMD all-reduce the (B,S,V/16) logits activation (33.6 GB/chip on
+        # llama3 train) instead of gathering this 65 MB weight — §Perf it.3
+        return ("model", None)
+    if name in ("unembed",):
+        return (None, "model")
+    if parent == "moe" or (name in ("w_gate", "w_up", "w_down") and nd - _stack_dims(path, leaf) == 3):
+        # expert-stacked (E, D, F): EP over model
+        if name in ("w_gate", "w_up", "w_down"):
+            return ("model", "data", None)
+        if name == "router":
+            return (None, None)
+    if name in _COL_PARALLEL:
+        # pure Megatron TP: sharding the contraction dim over 'data' (FSDP
+        # style) makes GSPMD all-reduce full-activation partial sums — 120
+        # GB/layer on llama3 train (§Perf iteration 4).  Optimizer-state
+        # memory is recovered by ZeRO-1 (optim/zero1.py) instead.
+        return (None, "model")
+    if name in _ROW_PARALLEL:
+        return ("model", None)
+    if name in ("patch_proj", "frame_proj"):
+        return (None, "model")
+    if name == "r_gates":
+        return (None, None, "model")
+    if name == "conv_w":
+        return (None, "model")
+    return None  # replicate
+
+
+def _stack_dims(path: Tuple[str, ...], leaf) -> int:
+    """Leading stacked-layer dims (scan over blocks adds 1; zamba mamba
+    adds 2).  Heuristic: params under 'blocks'/'encoder'/'decoder' have 1,
+    under 'mamba' have 2."""
+    for key in path:
+        if key in ("blocks", "encoder", "decoder"):
+            return 1
+        if key == "mamba":
+            return 2
+    return 0
+
+
+DEFAULT_AXES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axis_len(axis, sizes) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axis, 1)
+
+
+def _guard(spec_dims, shape, sizes):
+    """Drop any axis whose length does not divide the dim (jit requires
+    exact divisibility for in_shardings)."""
+    out = []
+    for d, axis in enumerate(spec_dims):
+        if axis is not None and shape[d] % _axis_len(axis, sizes) != 0:
+            axis = None
+        out.append(axis)
+    return tuple(out)
+
+
+def param_spec(path: Tuple[str, ...], leaf, sizes=None) -> P:
+    sizes = sizes or DEFAULT_AXES
+    rule = _rule_for(path, leaf)
+    nd = leaf.ndim
+    if rule is None:
+        return P()
+    rule = tuple(rule)
+    base = max(nd - len(rule), 0)
+    full = (None,) * base + rule[: nd - base] if len(rule) <= nd else (None,) * nd
+    return P(*_guard(full, leaf.shape, sizes))
+
+
+def _path_names(keypath) -> Tuple[str, ...]:
+    names = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_specs(params: Any, sizes=None) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: param_spec(_path_names(kp), leaf, sizes), params
+    )
+
+
+def opt_specs(params_specs: Any, opt_state_shape: Any) -> Any:
+    """m/v mirror the param specs; step is replicated."""
+    return {
+        "m": params_specs,
+        "v": params_specs,
+        "step": P(),
+    }
+
+
+def batch_specs(batch: Any, dp_axes=("pod", "data"), sizes=None) -> Any:
+    sizes = sizes or DEFAULT_AXES
+
+    def spec(leaf):
+        nd = getattr(leaf, "ndim", len(leaf.shape))
+        dims = _guard((dp_axes,) + (None,) * (nd - 1), leaf.shape, sizes)
+        return P(*dims)
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cache: Any, batch_size: int, dp_size: int, dp_axes=("data",), sizes=None) -> Any:
+    """Decode-state sharding, key-aware:
+
+    * KV caches ('k'/'v': (..., B, S, KV, hd)): KV heads shard on 'model'
+      (GSPMD pads when KV < |model|); B shards on data when divisible,
+      otherwise (long-context, B=1) the *sequence* dim shards on data
+      (sequence-parallel decode — partial attention combined by GSPMD).
+    * SSM/conv/sLSTM states: batch on data, head/channel dim on 'model'.
+    """
+    sizes = sizes or DEFAULT_AXES
+    batch_ok = batch_size >= dp_size and batch_size % dp_size == 0
+    tp = sizes.get("model", 1)
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        name = path[-1] if path else ""
+        out = [None] * nd
+        if name in ("k", "v") and nd >= 4:
+            b_d, s_d, kv_d, hd_d = nd - 4, nd - 3, nd - 2, nd - 1
+            if batch_ok:
+                out[b_d] = dp_axes
+            elif shape[s_d] % dp_size == 0:
+                out[s_d] = dp_axes  # sequence-parallel long-context decode
+            # flash-decode style: shard cached positions over 'model' — the
+            # softmax/value partials GSPMD emits are O(B*H*hd), instead of
+            # gathering the whole cache (hillclimb 2, EXPERIMENTS.md §Perf)
+            if out[s_d] is None and shape[s_d] % tp == 0:
+                out[s_d] = "model"
+            elif shape[kv_d] % tp == 0:
+                out[kv_d] = "model"
+            elif shape[hd_d] % tp == 0:
+                out[hd_d] = "model"
+            return P(*_guard(tuple(out), shape, sizes))
+        if name == "pos":
+            return P()
+        # generic state (conv: (...,B,W,C); ssd C/n: (...,B,nh,...); slstm)
+        placed_dp = False
+        for d, s in enumerate(shape):
+            if not placed_dp and s == batch_size and batch_ok:
+                out[d] = dp_axes
+                placed_dp = True
+                break
+        for d in range(nd - 1, -1, -1):
+            if out[d] is None and d != 0 and shape[d] % tp == 0 and shape[d] >= tp:
+                out[d] = "model"
+                break
+        return P(*_guard(tuple(out), shape, sizes))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: spec_for(_path_names(kp), leaf), cache)
+
+
+def make_sharding(mesh: Mesh, tree_specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,55 @@
+"""Sequence-parallel decode attention (long-context serving).
+
+For ``long_500k`` the KV cache is sharded along the *sequence* dimension
+over the data axis.  Each shard computes a flash-decode partial —
+(local max m, local sum l, local weighted acc) — and the partials are
+combined exactly with two ``psum``\\ s (log-sum-exp algebra).  One token's
+attention over 524k cached positions thus never materializes on one chip.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sp_decode_attention(q: jnp.ndarray, k_shard: jnp.ndarray, v_shard: jnp.ndarray,
+                        valid_len_local: jnp.ndarray, sm_scale: float,
+                        axis: str = "data") -> jnp.ndarray:
+    """Inside shard_map.  q: (B, H, hd) replicated over ``axis``;
+    k_shard/v_shard: (B, S_local, H, hd); valid_len_local: () or (B,) —
+    number of valid cached positions in this shard.  Returns (B, H, hd).
+    """
+    b, s_loc, h, hd = k_shard.shape
+    kf = k_shard.astype(jnp.float32)
+    vf = v_shard.astype(jnp.float32)
+    qf = q.astype(jnp.float32) * sm_scale
+
+    logits = jnp.einsum("bhd,bshd->bhs", qf, kf)
+    pos = jnp.arange(s_loc, dtype=jnp.int32)
+    mask = pos[None, None, :] < jnp.reshape(valid_len_local, (-1, 1, 1))
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_loc = jnp.max(logits, axis=-1)                       # (B, H)
+    m_glob = jax.lax.pmax(m_loc, axis)
+    p = jnp.exp(logits - m_glob[..., None])
+    l_loc = jnp.sum(p, axis=-1)                            # (B, H)
+    acc_loc = jnp.einsum("bhs,bshd->bhd", p, vf)
+    l_glob = jax.lax.psum(l_loc, axis)
+    acc_glob = jax.lax.psum(acc_loc, axis)
+    return (acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]).astype(q.dtype)
+
+
+def full_decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                              valid_len: jnp.ndarray, sm_scale: float) -> jnp.ndarray:
+    """Unsharded oracle."""
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32) * sm_scale, k.astype(jnp.float32))
+    pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    mask = pos[None, None, :] < jnp.reshape(valid_len, (-1, 1, 1))
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,88 @@
+"""Batched serving engine: wave-batched prefill + lockstep decode.
+
+Requests are grouped into fixed-size waves; each wave's prompts are
+left-padded to a common length, prefilled in one jit'd call, then decoded
+in lockstep (one token per engine step for every sequence).  Finished
+sequences are masked out; the wave retires when all finish, and the next
+wave is admitted.  All shapes are static, so the prefill and decode steps
+compile exactly once per (batch, length) bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (plen,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model, batch_slots: int, max_len: int):
+        self.model = model
+        self.cfg = model.cfg
+        self.slots = batch_slots
+        self.max_len = max_len
+        self._queue: List[Request] = []
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _next_wave(self) -> List[Request]:
+        wave = self._queue[: self.slots]
+        self._queue = self._queue[self.slots :]
+        return wave
+
+    def run(self, params, max_steps: int = 256) -> List[Request]:
+        finished: List[Request] = []
+        steps = 0
+        while self._queue and steps < max_steps:
+            wave = self._next_wave()
+            # pad the wave to full slots by repeating the last request's
+            # prompt (masked out of results)
+            prompts = [r.prompt for r in wave]
+            while len(prompts) < self.slots:
+                prompts.append(prompts[-1])
+            plen = max(len(p) for p in prompts)
+            toks = np.zeros((self.slots, plen), np.int32)
+            for i, p in enumerate(prompts):
+                toks[i, plen - len(p):] = p  # left-align end-of-prompt
+
+            cache = self.model.init_cache(self.slots, self.max_len)
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.cfg.frontend == "patches":
+                batch["patches"] = jnp.zeros((self.slots, self.cfg.frontend_len, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
+            if self.cfg.frontend == "frames":
+                batch["frames"] = jnp.zeros((self.slots, plen, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
+            logits, cache = self._prefill(params, batch, cache)
+            last = np.asarray(jnp.argmax(logits[:, -1, : self.cfg.vocab], axis=-1))
+            live = np.array([i < len(wave) for i in range(self.slots)])
+            for i, r in enumerate(wave):
+                r.out_tokens.append(int(last[i]))
+
+            while any(live[: len(wave)]) and steps < max_steps:
+                steps += 1
+                logits, cache = self._decode(params, cache, jnp.asarray(last[:, None], jnp.int32))
+                last = np.asarray(jnp.argmax(logits[:, -1, : self.cfg.vocab], axis=-1))
+                for i, r in enumerate(wave):
+                    if not live[i]:
+                        continue
+                    tok = int(last[i])
+                    r.out_tokens.append(tok)
+                    if tok == r.eos_id or len(r.out_tokens) >= r.max_new_tokens:
+                        r.done = True
+                        live[i] = False
+                        finished.append(r)
+        return finished

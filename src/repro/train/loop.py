@@ -1,0 +1,156 @@
+"""Training loop with fault tolerance and straggler monitoring.
+
+``Trainer`` runs jit'd train steps over the data pipeline with:
+* periodic + final atomic checkpoints (async writer),
+* automatic restore-on-start (resume is bit-exact: the pipeline state and
+  RNG live in the checkpoint),
+* a ``FaultInjector`` hook used by tests to simulate preemption/node
+  failure mid-run,
+* a step-time watchdog that flags stragglers (slow steps) and records
+  them for exclusion/rebalance at the next restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.pipeline import DataConfig, DataPipeline, PipelineState
+from ..optim import adamw
+from . import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0  # step slower than 3x median => straggler
+
+
+class FaultInjector:
+    """Raises at a chosen step (tests: simulated preemption)."""
+
+    def __init__(self, fail_at_step: Optional[int] = None):
+        self.fail_at_step = fail_at_step
+        self.fired = False
+
+    def check(self, step: int) -> None:
+        if self.fail_at_step is not None and step == self.fail_at_step and not self.fired:
+            self.fired = True
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+class StragglerWatchdog:
+    def __init__(self, factor: float = 3.0):
+        self.times: list = []
+        self.factor = factor
+        self.flagged: list = []
+
+    def record(self, step: int, dt: float) -> None:
+        self.times.append(dt)
+        if len(self.times) >= 8:
+            med = float(np.median(self.times[-64:]))
+            if dt > self.factor * med:
+                self.flagged.append({"step": step, "dt": dt, "median": med})
+
+
+class Trainer:
+    def __init__(self, model, opt_cfg: adamw.AdamWConfig, data_cfg: DataConfig,
+                 train_cfg: TrainConfig, rng: Optional[jax.Array] = None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.data_cfg = data_cfg
+        self.cfg = train_cfg
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.pipeline = DataPipeline(data_cfg)
+        self.watchdog = StragglerWatchdog(train_cfg.straggler_factor)
+        self.checkpointer = ckpt.AsyncCheckpointer(train_cfg.ckpt_dir, train_cfg.keep) if train_cfg.ckpt_dir else None
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: self.model.loss(p, batch, remat=True), has_aux=True)(params)
+            new_p, new_o, info = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+            return new_p, new_o, {"loss": loss, **info}
+
+        self.train_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+        self.params = self.model.init(self.rng)
+        self.opt_state = adamw.init_state(self.params)
+        self.step = 0
+        self.history: list = []
+        if train_cfg.ckpt_dir:
+            self._maybe_restore()
+
+    # ------------------------------------------------------------- restore
+    def _maybe_restore(self) -> None:
+        last = ckpt.latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return
+        step, state = ckpt.restore(self.cfg.ckpt_dir, {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "data": {"step": np.zeros((), np.int64)},
+        })
+        self.params = state["params"]
+        self.opt_state = state["opt_state"]
+        self.step = step
+        self.pipeline.restore(PipelineState(step=int(state["data"]["step"])))
+
+    def _save(self) -> None:
+        if self.checkpointer is None:
+            return
+        self.checkpointer.save(self.step, {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "data": {"step": np.asarray(self.pipeline.state.step, np.int64)},
+        })
+
+    # ----------------------------------------------------------------- run
+    def run(self, fault: Optional[FaultInjector] = None) -> Dict[str, Any]:
+        while self.step < self.cfg.steps:
+            t0 = time.time()
+            batch = self.pipeline.next()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            if fault is not None:
+                fault.check(self.step)
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            self.step += 1
+            dt = time.time() - t0
+            self.watchdog.record(self.step, dt)
+            if self.step % self.cfg.log_every == 0 or self.step == self.cfg.steps:
+                self.history.append({"step": self.step, "loss": loss, "dt": dt})
+            if self.cfg.ckpt_dir and (self.step % self.cfg.ckpt_every == 0 or self.step == self.cfg.steps):
+                self._save()
+        if self.checkpointer is not None:
+            self.checkpointer.wait()
+        return {"final_loss": self.history[-1]["loss"] if self.history else None,
+                "history": self.history,
+                "stragglers": self.watchdog.flagged}
+
+
+def run_with_restarts(make_trainer: Callable[[], Trainer],
+                      fault: Optional[FaultInjector] = None,
+                      max_restarts: int = 3) -> Dict[str, Any]:
+    """Fault-tolerant driver: on failure, rebuild the trainer (which
+    restores from the last checkpoint) and continue."""
+    restarts = 0
+    while True:
+        trainer = make_trainer()
+        try:
+            out = trainer.run(fault)
+            out["restarts"] = restarts
+            return out
+        except RuntimeError:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            trainer.pipeline.close()

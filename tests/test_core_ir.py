@@ -1,0 +1,282 @@
+"""Unit + property tests for the Stripe core: affine math, polyhedra,
+frontend lowering, the reference interpreter, and the jnp backend."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Affine,
+    aff,
+    Constraint,
+    Index,
+    Polyhedron,
+    TileProgram,
+    execute_reference,
+    lower_program_jnp,
+    single_op_program,
+    validate_program,
+)
+from repro.core.validate import affine_map_injective
+
+
+# ---------------------------------------------------------------- affine
+def test_affine_algebra():
+    x, y = Affine.var("x"), Affine.var("y")
+    e = 2 * x + y - 3
+    assert e.eval({"x": 5, "y": 1}) == 8
+    assert (e - e).is_const() and (e - e).const == 0
+    assert (e * 2).eval({"x": 1, "y": 1}) == 0
+    assert e.coef("x") == 2 and e.coef("z") == 0
+
+
+def test_affine_substitute_tiling():
+    # i -> 4*io + ii   (the autotiling index split)
+    i = Affine.var("i")
+    acc = 3 * i + 7
+    sub = acc.substitute({"i": 4 * Affine.var("io") + Affine.var("ii")})
+    assert sub.eval({"io": 2, "ii": 1}) == 3 * (4 * 2 + 1) + 7
+
+
+@given(
+    st.dictionaries(st.sampled_from("xyzw"), st.integers(-5, 5), max_size=4),
+    st.integers(-10, 10),
+    st.dictionaries(st.sampled_from("xyzw"), st.integers(-3, 3), min_size=4, max_size=4),
+)
+def test_affine_eval_linear(terms, const, env):
+    e = Affine.make(terms, const)
+    manual = const + sum(c * env[n] for n, c in terms.items())
+    assert e.eval(env) == manual
+
+
+# ------------------------------------------------------------ polyhedron
+def test_polyhedron_counts_and_bounds():
+    # triangle: 0 <= i < 4, 0 <= j < 4, i + j <= 3
+    p = Polyhedron(
+        [Index("i", 4), Index("j", 4)],
+        [Constraint(aff(3) - Affine.var("i") - Affine.var("j"))],
+    )
+    assert p.rect_size() == 16
+    assert p.count() == 10
+    lo, hi = p.expr_bounds(Affine.var("i") + Affine.var("j"))
+    assert (lo, hi) == (0, 6)
+    assert not p.definitely_empty()
+    p2 = Polyhedron([Index("i", 4)], [Constraint(Affine.var("i") - 10)])
+    assert p2.definitely_empty()
+
+
+def test_passthrough_index():
+    # child receives x from parent: x = 2 in env
+    p = Polyhedron([Index("i", 3), Index("x", 1, affine=aff(2))])
+    pts = list(p.points())
+    assert all(pt["x"] == 2 for pt in pts) and len(pts) == 3
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(-4, 8))
+def test_constraint_count_matches_bruteforce(ni, nj, bound):
+    p = Polyhedron(
+        [Index("i", ni), Index("j", nj)],
+        [Constraint(aff(bound) - Affine.var("i") - Affine.var("j"))],
+    )
+    brute = sum(1 for i in range(ni) for j in range(nj) if i + j <= bound)
+    assert p.count() == brute
+
+
+# ------------------------------------------------------------- injectivity
+def test_affine_map_injective():
+    x, y = Affine.var("x"), Affine.var("y")
+    # (4x + y) with y range 4 -> injective mixed radix
+    assert affine_map_injective([4 * x + y], {"x": 8, "y": 4})
+    # (2x + y) with y range 4 -> overlapping, not provable
+    assert not affine_map_injective([2 * x + y], {"x": 8, "y": 4})
+    # x and y to separate dims
+    assert affine_map_injective([x, y], {"x": 8, "y": 4})
+    # same var feeding two dims is fine for injectivity? we are conservative
+    assert affine_map_injective([x + 5, 3 * y], {"x": 8, "y": 4})
+
+
+# ------------------------------------------------------------- frontend
+def _matmul_prog(m=6, k=5, n=4, dtype="float32"):
+    return single_op_program(
+        "O[i, j] += A[i, c] * B[c, j]",
+        {"A": ((m, k), dtype), "B": ((k, n), dtype), "O": ((m, n), dtype)},
+        out="O",
+    )
+
+
+def test_frontend_matmul_structure():
+    prog = _matmul_prog()
+    assert validate_program(prog) == []
+    blk = prog.entry.stmts[0]
+    assert sorted(blk.idx_ranges().items()) == [("c", 5), ("i", 6), ("j", 4)]
+    assert blk.constraints == []
+    out = blk.ref("O_out")
+    assert out.agg == "add" and out.shape == (1, 1)
+
+
+def test_frontend_conv_constraints():
+    prog = single_op_program(
+        "O[x, k] += I[x + i - 1, c] * F[i, c, k]",
+        {"I": ((8, 3), "float32"), "F": ((3, 3, 4), "float32"), "O": ((8, 4), "float32")},
+        out="O",
+    )
+    blk = prog.entry.stmts[0]
+    # halo constraints: x+i-1 >= 0 and 7 - (x+i-1) >= 0
+    assert len(blk.constraints) == 2
+    assert validate_program(prog) == []
+
+
+def test_frontend_range_inference_errors():
+    with pytest.raises(ValueError):
+        single_op_program(
+            "O[i] += A[i + j]",  # j never appears alone
+            {"A": ((8,), "float32"), "O": ((4,), "float32")},
+            out="O",
+        )
+
+
+# ------------------------------------------- interpreter vs jnp vs numpy
+def test_matmul_interp_and_jnp():
+    rng = np.random.RandomState(0)
+    a = rng.randn(6, 5).astype(np.float32)
+    b = rng.randn(5, 4).astype(np.float32)
+    prog = _matmul_prog()
+    ref = execute_reference(prog, {"A": a, "B": b})["O"]
+    np.testing.assert_allclose(ref, a @ b, rtol=1e-5)
+    got = lower_program_jnp(prog)({"A": a, "B": b})["O"]
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-5)
+
+
+def test_conv2d_with_halo_matches_numpy():
+    rng = np.random.RandomState(1)
+    H, W, C, K = 6, 5, 3, 4
+    i = rng.randn(H, W, C).astype(np.float32)
+    f = rng.randn(3, 3, C, K).astype(np.float32)
+    prog = single_op_program(
+        "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
+        {"I": ((H, W, C), "float32"), "F": ((3, 3, C, K), "float32"), "O": ((H, W, K), "float32")},
+        out="O",
+    )
+    assert validate_program(prog) == []
+    # numpy oracle: same-padded conv
+    pad = np.pad(i, ((1, 1), (1, 1), (0, 0)))
+    want = np.zeros((H, W, K), np.float32)
+    for x in range(H):
+        for y in range(W):
+            want[x, y] = np.tensordot(pad[x : x + 3, y : y + 3], f, axes=3)
+    ref = execute_reference(prog, {"I": i, "F": f})["O"]
+    np.testing.assert_allclose(ref, want, rtol=1e-4, atol=1e-5)
+    got = lower_program_jnp(prog)({"I": i, "F": f})["O"]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+def test_strided_access():
+    rng = np.random.RandomState(2)
+    x = rng.randn(8, 6).astype(np.float32)
+    prog = single_op_program(
+        "O[i, j] += X[2 * i, j]",
+        {"X": ((8, 6), "float32"), "O": ((4, 6), "float32")},
+        out="O",
+    )
+    got = lower_program_jnp(prog)({"X": x})["O"]
+    np.testing.assert_allclose(np.asarray(got), x[::2], rtol=1e-6)
+    ref = execute_reference(prog, {"X": x})["O"]
+    np.testing.assert_allclose(ref, x[::2], rtol=1e-6)
+
+
+def test_max_pool_aggregation():
+    rng = np.random.RandomState(3)
+    x = rng.randn(8,).astype(np.float32)
+    prog = single_op_program(
+        "O[i] max= X[2 * i + w]",
+        {"X": ((8,), "float32"), "O": ((4,), "float32")},
+        out="O",
+        ranges={"w": 2},
+    )
+    want = x.reshape(4, 2).max(1)
+    np.testing.assert_allclose(execute_reference(prog, {"X": x})["O"], want)
+    np.testing.assert_allclose(np.asarray(lower_program_jnp(prog)({"X": x})["O"]), want)
+
+
+def test_elementwise_dag():
+    rng = np.random.RandomState(4)
+    a = rng.randn(5, 3).astype(np.float32)
+    b = rng.randn(3,).astype(np.float32)
+    prog = single_op_program(
+        "O[i, j] = relu(A[i, j] + B[j]) * 2.0",
+        {"A": ((5, 3), "float32"), "B": ((3,), "float32"), "O": ((5, 3), "float32")},
+        out="O",
+    )
+    want = np.maximum(a + b, 0) * 2.0
+    np.testing.assert_allclose(execute_reference(prog, {"A": a, "B": b})["O"], want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(lower_program_jnp(prog)({"A": a, "B": b})["O"]), want, rtol=1e-6)
+
+
+def test_multi_op_program_temp_chain():
+    rng = np.random.RandomState(5)
+    a = rng.randn(4, 3).astype(np.float32)
+    b = rng.randn(3, 2).astype(np.float32)
+    tp = TileProgram("mlp")
+    tp.input("A", (4, 3))
+    tp.input("B", (3, 2))
+    tp.temp("T", (4, 2))
+    tp.output("O", (4, 2))
+    tp.op("T[i, j] += A[i, c] * B[c, j]")
+    tp.op("O[i, j] = relu(T[i, j])")
+    prog = tp.build()
+    want = np.maximum(a @ b, 0)
+    np.testing.assert_allclose(execute_reference(prog, {"A": a, "B": b})["O"], want, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(lower_program_jnp(prog)({"A": a, "B": b})["O"]), want, rtol=1e-5)
+
+
+def test_int8_conv_like_paper():
+    # the paper's Fig 4/5 example is int8 12x16x8 -> 12x16x16 with 3x3 weights
+    rng = np.random.RandomState(6)
+    i = rng.randint(-4, 4, size=(12, 16, 8)).astype(np.int8)
+    f = rng.randint(-2, 2, size=(3, 3, 8, 16)).astype(np.int8)
+    prog = single_op_program(
+        "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
+        {"I": ((12, 16, 8), "int8"), "F": ((3, 3, 8, 16), "int8"), "O": ((12, 16, 16), "int32")},
+        out="O",
+    )
+    assert validate_program(prog, limit=500000) == []
+    ref = execute_reference(prog, {"I": i, "F": f})["O"]
+    got = lower_program_jnp(prog)({"I": i, "F": f})["O"]
+    np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+# ------------------------------------------------- hypothesis: contraction
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(2, 5), st.integers(2, 5), st.integers(2, 5),
+    st.sampled_from(["+=", "max="]),
+)
+def test_property_contraction_matches_interp(m, k, n, agg):
+    rng = np.random.RandomState(m * 100 + k * 10 + n)
+    a = rng.randn(m, k).astype(np.float32)
+    b = rng.randn(k, n).astype(np.float32)
+    prog = single_op_program(
+        f"O[i, j] {agg} A[i, c] * B[c, j]",
+        {"A": ((m, k), "float32"), "B": ((k, n), "float32"), "O": ((m, n), "float32")},
+        out="O",
+    )
+    ref = execute_reference(prog, {"A": a, "B": b})["O"]
+    got = np.asarray(lower_program_jnp(prog)({"A": a, "B": b})["O"])
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_validation_catches_race():
+    # two iterations write the same element with assign -> invalid
+    prog = single_op_program(
+        "O[i] = A[i + j]",
+        {"A": ((8,), "float32"), "O": ((4,), "float32")},
+        out="O",
+        ranges={"j": 2},
+    )
+    errs = validate_program(prog)
+    assert errs and "assign" in errs[0]
+
+
+def test_pretty_printer_roundtrippable_strings():
+    prog = _matmul_prog()
+    text = prog.pretty()
+    assert "block" in text and "O_out" in text and "add" in text

@@ -1,0 +1,329 @@
+"""Optimization-pass tests: every rewrite must preserve the exact semantics
+of the reference interpreter, and the paper's Fig. 4/5 artifacts must be
+reproduced."""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TileProgram, execute_reference, single_op_program, validate_program
+from repro.core.cost import evaluate_tiling, lines_for_view
+from repro.core.hwconfig import CPU_TEST, PAPER_FIG4, TPU_V5E
+from repro.core.passes import PassManager, compile_program, get_pass
+from repro.core.passes.autotile import choose_tiling
+from repro.core.passes.boundary import split_boundary
+from repro.core.tiling import split_block
+
+
+def _conv_prog(h=12, w=16, cin=8, cout=16, dtype="int8", out_dtype="int32"):
+    return single_op_program(
+        "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
+        {
+            "I": ((h, w, cin), dtype),
+            "F": ((3, 3, cin, cout), dtype),
+            "O": ((h, w, cout), out_dtype),
+        },
+        out="O",
+    )
+
+
+def _matmul_prog(m, k, n):
+    return single_op_program(
+        "O[i, j] += A[i, c] * B[c, j]",
+        {"A": ((m, k), "float32"), "B": ((k, n), "float32"), "O": ((m, n), "float32")},
+        out="O",
+    )
+
+
+def _rand_inputs(prog, seed=0):
+    rng = np.random.RandomState(seed)
+    out = {}
+    for name in prog.inputs:
+        d = prog.buffers[name]
+        if "int" in d.dtype:
+            out[name] = rng.randint(-3, 4, size=d.shape).astype(np.dtype(d.dtype))
+        else:
+            out[name] = rng.randn(*d.shape).astype(np.dtype(d.dtype))
+    return out
+
+
+def _assert_same_outputs(prog_a, prog_b, inputs, **tol):
+    ra = execute_reference(prog_a, inputs)
+    rb = execute_reference(prog_b, inputs)
+    for k in prog_a.outputs:
+        np.testing.assert_allclose(ra[k], rb[k], **tol)
+
+
+# --------------------------------------------------------------- split_block
+def test_split_block_even_tiles_semantics():
+    prog = _matmul_prog(6, 4, 8)
+    tiled = copy.deepcopy(prog)
+    blk = tiled.entry.stmts[0]
+    tiled.entry.stmts[0] = split_block(blk, {"i": 3, "j": 4, "c": 2})
+    assert validate_program(tiled) == []
+    _assert_same_outputs(prog, tiled, _rand_inputs(prog), rtol=1e-5)
+
+
+def test_split_block_uneven_overflow_constraint():
+    prog = _matmul_prog(7, 5, 9)
+    tiled = copy.deepcopy(prog)
+    blk = tiled.entry.stmts[0]
+    outer = split_block(blk, {"i": 3, "j": 4, "c": 2})
+    tiled.entry.stmts[0] = outer
+    inner = outer.stmts[0]
+    # overflow constraints added, parent indices passed explicitly
+    assert len(inner.constraints) == 3
+    assert set(inner.passed) >= {"i", "j", "c"}
+    assert validate_program(tiled) == []
+    _assert_same_outputs(prog, tiled, _rand_inputs(prog, 1), rtol=1e-5)
+
+
+def test_split_block_conv_halo_shapes():
+    """Fig. 5b: 3x4x16 output tile => 5x6x8 haloed input view at offset
+    [3x-1, 4y-1, 0]."""
+    prog = _conv_prog()
+    blk = copy.deepcopy(prog.entry.stmts[0])
+    outer = split_block(blk, {"x": 3, "y": 4})
+    i_ref = outer.ref("I")
+    assert i_ref.shape == (5, 6, 8)
+    assert str(i_ref.offsets[0]) == "3*x - 1"
+    assert str(i_ref.offsets[1]) == "4*y - 1"
+    o_ref = [r for r in outer.refs if r.agg][0]
+    assert o_ref.shape == (3, 4, 16)
+    # F is untouched by the tiling: full view at offset 0
+    f_ref = outer.ref("F")
+    assert f_ref.shape == (3, 3, 8, 16)
+
+
+def test_split_block_conv_semantics_small():
+    prog = _conv_prog(h=6, w=4, cin=2, cout=3)
+    tiled = copy.deepcopy(prog)
+    tiled.entry.stmts[0] = split_block(tiled.entry.stmts[0], {"x": 3, "y": 2, "k": 3})
+    assert validate_program(tiled, limit=500000) == []
+    _assert_same_outputs(prog, tiled, _rand_inputs(prog, 2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(2, 7), st.integers(2, 6), st.integers(2, 6),
+    st.integers(1, 7), st.integers(1, 6), st.integers(1, 6),
+)
+def test_property_tiling_preserves_matmul(m, k, n, tm, tk, tn):
+    prog = _matmul_prog(m, k, n)
+    tiled = copy.deepcopy(prog)
+    tiled.entry.stmts[0] = split_block(
+        tiled.entry.stmts[0], {"i": min(tm, m), "c": min(tk, k), "j": min(tn, n)}
+    )
+    _assert_same_outputs(prog, tiled, _rand_inputs(prog, m * 100 + k * 10 + n), rtol=1e-5)
+
+
+# --------------------------------------------------------------- Fig 4 cost
+def test_fig4_cost_model_values():
+    """The Fig. 5b tiling: input tile 5x6x8 = 30 lines (8-elem lines, c
+    contiguous), output tile 3x4x16 = 24 lines, 13824 MACs per tile."""
+    prog = _conv_prog()
+    blk = prog.entry.stmts[0]
+    cost = evaluate_tiling(
+        blk, {"x": 3, "y": 4}, PAPER_FIG4,
+        dict(PAPER_FIG4.passes[0][1]),
+    )
+    assert cost.feasible
+    # 16 tiles x (30 + 24) lines
+    assert cost.lines == 16 * 54
+    # total MACs: interior-only (halo-constrained points removed)
+    # = sum over (x,y) of valid (i,j) window x 8 x 16
+    # exact count equals the polyhedron count
+    assert cost.macs == blk.poly.count()
+    # memory: 240 + 192 = 432 <= 512 cap
+    assert cost.mem_elems == 240 + 192
+
+
+def test_fig4_autotile_selects_feasible_minimum():
+    prog = _conv_prog()
+    blk = prog.entry.stmts[0]
+    tiles, cost = choose_tiling(blk, PAPER_FIG4, dict(PAPER_FIG4.passes[0][1]))
+    assert cost.feasible
+    assert cost.mem_elems <= 512
+    # the chosen tiling should not cost more than the paper's example tiling
+    ref = evaluate_tiling(blk, {"x": 3, "y": 4}, PAPER_FIG4, dict(PAPER_FIG4.passes[0][1]))
+    assert cost.cost <= ref.cost + 1e-12
+
+
+def test_lines_for_view_alignment():
+    from repro.core.ir import RefDir, Refinement
+    from repro.core.affine import aff
+
+    r = Refinement(dir=RefDir.IN, from_buf="X", into="X",
+                   offsets=(aff(0), aff(0)), shape=(1, 1),
+                   dtype="int8", strides=(16, 1))
+    assert lines_for_view((4, 16), r, 8, aligned=True) == 4 * 2
+    assert lines_for_view((4, 5), r, 8, aligned=False) == 4 * 2  # straddle
+    assert lines_for_view((4, 5), r, 8, aligned=True) == 4 * 1
+
+
+# ------------------------------------------------------------ full pipeline
+def test_full_pipeline_paper_config_preserves_semantics():
+    prog = _conv_prog(h=8, w=6, cin=2, cout=4)
+    src = copy.deepcopy(prog)
+    out = compile_program(prog, PAPER_FIG4)
+    assert out.source is not None
+    _assert_same_outputs(src, out, _rand_inputs(src, 3))
+
+
+def test_full_pipeline_cpu_config_matmul():
+    prog = _matmul_prog(16, 12, 8)
+    src = copy.deepcopy(prog)
+    out = compile_program(prog, CPU_TEST)
+    _assert_same_outputs(src, out, _rand_inputs(src, 4), rtol=1e-5)
+    assert validate_program(out, limit=500000) == []
+
+
+# ------------------------------------------------------------------ boundary
+def test_boundary_split_removes_interior_constraints():
+    prog = _matmul_prog(7, 4, 4)
+    blk = prog.entry.stmts[0]
+    outer = split_block(blk, {"i": 3})
+    pieces = split_boundary(outer)
+    assert len(pieces) == 2
+    interior, boundary = pieces
+
+    def count(b):
+        n = len(b.constraints)
+        for s in b.stmts:
+            if hasattr(s, "constraints"):
+                n += count(s)
+        return n
+
+    assert count(interior) == 0  # constraint-free interior
+    assert count(boundary) >= 1
+    # semantics preserved
+    tiled = copy.deepcopy(prog)
+    tiled.entry.stmts = pieces
+    _assert_same_outputs(prog, tiled, _rand_inputs(prog, 5), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------- fuse
+def _mlp_prog(m=6, k=5, n=4):
+    tp = TileProgram("mlp")
+    tp.input("A", (m, k))
+    tp.input("B", (k, n))
+    tp.temp("T", (m, n))
+    tp.output("O", (m, n))
+    tp.op("T[i, j] += A[i, c] * B[c, j]")
+    tp.op("O[i, j] = relu(T[i, j])")
+    return tp.build()
+
+
+def test_fuse_matmul_relu():
+    prog = _mlp_prog()
+    src = copy.deepcopy(prog)
+    fused = get_pass("fuse")(prog, TPU_V5E, {})
+    blocks = [s for s in fused.entry.stmts if hasattr(s, "tags")]
+    assert len(blocks) == 1 and "fused" in blocks[0].tags
+    assert validate_program(fused) == []
+    _assert_same_outputs(src, fused, _rand_inputs(src, 6), rtol=1e-5)
+
+
+def test_fuse_then_autotile_preserves_semantics():
+    prog = _mlp_prog(8, 6, 8)
+    src = copy.deepcopy(prog)
+    prog = get_pass("fuse")(prog, CPU_TEST, {})
+    prog = get_pass("autotile")(prog, CPU_TEST, {"cost": "cache_lines", "search": "pow2", "mem_cap_elems": 64})
+    assert validate_program(prog, limit=500000) == []
+    _assert_same_outputs(src, prog, _rand_inputs(src, 7), rtol=1e-5)
+
+
+def test_fuse_skipped_when_temp_multiply_read():
+    tp = TileProgram("p")
+    tp.input("A", (4, 4))
+    tp.input("B", (4, 4))
+    tp.temp("T", (4, 4))
+    tp.output("O", (4, 4))
+    tp.output("P", (4, 4))
+    tp.op("T[i, j] += A[i, c] * B[c, j]")
+    tp.op("O[i, j] = relu(T[i, j])")
+    tp.op("P[i, j] = tanh(T[i, j])")
+    prog = tp.build()
+    fused = get_pass("fuse")(prog, TPU_V5E, {})
+    assert len([s for s in fused.entry.stmts if hasattr(s, "tags")]) == 3
+
+
+# ------------------------------------------------------------------- stencil
+def test_stencil_pass_tags_mxu():
+    prog = _matmul_prog(256, 256, 256)
+    prog = get_pass("autotile")(prog, TPU_V5E, {"cost": "roofline", "search": "pow2", "mem_cap_frac": 0.45})
+    prog = get_pass("stencil")(prog, TPU_V5E, {"stencil": "mxu", "min_dim": 16})
+    tagged = [b for s in prog.entry.stmts if hasattr(s, "walk") for b in s.walk() if "mxu" in b.tags]
+    assert tagged, "expected an mxu-tagged innermost block"
+
+
+# ----------------------------------------------------------------- transpose
+def test_transpose_pass_inserts_copy():
+    prog = single_op_program(
+        "O[i, j] += A[c, i] * B[c, j]",
+        {"A": ((4, 6), "float32"), "B": ((4, 5), "float32"), "O": ((6, 5), "float32")},
+        out="O",
+    )
+    src = copy.deepcopy(prog)
+    out = get_pass("transpose")(prog, TPU_V5E, {})
+    names = [s.name for s in out.entry.stmts if hasattr(s, "name")]
+    assert any("transpose" in n for n in names)
+    _assert_same_outputs(src, out, _rand_inputs(src, 8), rtol=1e-5)
+
+
+# ----------------------------------------------------------------- partition
+def test_partition_pass_banks():
+    prog = _matmul_prog(8, 4, 4)
+    src = copy.deepcopy(prog)
+    out = get_pass("partition")(prog, CPU_TEST, {"n_units": 4})
+    blk = out.entry.stmts[0]
+    assert any(t.startswith("partition:") for t in blk.tags)
+    banked = [r for r in blk.refs if r.location and r.location.bank is not None]
+    assert banked
+    _assert_same_outputs(src, out, _rand_inputs(src, 9), rtol=1e-5)
+
+
+# ------------------------------------------------------------------ schedule
+def test_schedule_dag_and_levels():
+    from repro.core.passes.schedule import dependency_dag, wavefronts
+
+    tp = TileProgram("p")
+    tp.input("A", (4, 4))
+    tp.temp("T", (4, 4))
+    tp.temp("U", (4, 4))
+    tp.output("O", (4, 4))
+    tp.op("T[i, j] = relu(A[i, j])")
+    tp.op("U[i, j] = tanh(A[i, j])")   # independent of T
+    tp.op("O[i, j] += T[i, c] * U[c, j]")
+    prog = tp.build()
+    blocks = [s for s in prog.entry.stmts if hasattr(s, "refs")]
+    deps = dependency_dag(blocks)
+    assert deps[1] == set()            # U does not depend on T
+    assert deps[2] == {0, 1}
+    assert wavefronts(deps) == [0, 0, 1]
+
+
+# ------------------------------------------------------- localize + schedule
+def test_localize_assigns_locations_and_gcs_temp():
+    prog = _mlp_prog()
+    prog = get_pass("fuse")(prog, TPU_V5E, {})
+    prog = get_pass("autotile")(prog, TPU_V5E, {"cost": "roofline", "search": "pow2", "mem_cap_frac": 0.45})
+    prog = get_pass("localize")(prog, TPU_V5E, {"inner": "VMEM"})
+    assert "T" not in prog.buffers  # scalarized away
+    locs = set()
+    for s in prog.entry.stmts:
+        if hasattr(s, "walk"):
+            for b in s.walk():
+                for r in b.refs:
+                    if r.location:
+                        locs.add(r.location.unit)
+    assert "HBM" in locs and ("VMEM" in locs or "VREG" in locs)
+
+
+def test_tpu_pipeline_end_to_end_semantics():
+    prog = _mlp_prog(8, 8, 8)
+    src = copy.deepcopy(prog)
+    out = compile_program(prog, TPU_V5E)
+    assert validate_program(out, limit=500000) == []
+    _assert_same_outputs(src, out, _rand_inputs(src, 10), rtol=1e-5)

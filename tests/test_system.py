@@ -1,0 +1,122 @@
+"""End-to-end system behaviour tests: frontend -> passes -> backends ->
+models -> training, exercising the whole stack in one path."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import TileProgram, execute_reference, validate_program
+from repro.core.hwconfig import PAPER_FIG4, TPU_V5E
+from repro.core.lower_jnp import lower_program_jnp
+from repro.core.passes import compile_program
+
+
+def test_end_to_end_compile_and_execute():
+    """The quickstart path: Tile op -> TPU pipeline -> both executors."""
+    tp = TileProgram("mlp")
+    tp.input("X", (64, 96))
+    tp.input("W", (96, 48))
+    tp.input("B", (48,))
+    tp.temp("T", (64, 48))
+    tp.output("O", (64, 48))
+    tp.op("T[i, j] += X[i, c] * W[c, j]")
+    tp.op("O[i, j] = relu(T[i, j] + B[j])")
+    prog = tp.build()
+    assert validate_program(prog) == []
+    src = copy.deepcopy(prog)
+    opt = compile_program(prog, TPU_V5E)
+
+    rng = np.random.RandomState(0)
+    arrays = {"X": rng.randn(64, 96).astype(np.float32),
+              "W": rng.randn(96, 48).astype(np.float32),
+              "B": rng.randn(48).astype(np.float32)}
+    want = np.maximum(arrays["X"] @ arrays["W"] + arrays["B"], 0)
+    # reference interpreter on the OPTIMIZED program (proves the rewrites)
+    got_interp = execute_reference(opt, arrays)["O"]
+    np.testing.assert_allclose(got_interp, want, rtol=1e-4, atol=1e-5)
+    # jnp backend from the preserved semantic source
+    got_jnp = lower_program_jnp(opt.source)({k: jnp.asarray(v) for k, v in arrays.items()})["O"]
+    np.testing.assert_allclose(np.asarray(got_jnp), want, rtol=1e-4, atol=1e-5)
+
+
+def test_autotiler_reproduces_paper_fig5b_tiling():
+    """On the paper's own Fig. 4 machine, the autotiler independently
+    derives the Fig. 5b tiling cost (3x4 spatial tiles, full channels,
+    54 cache lines per tile pair, 432-element footprint <= 512 cap)."""
+    from repro.core.cost import evaluate_tiling
+    from repro.core.frontend import single_op_program
+    from repro.core.passes.autotile import choose_tiling
+
+    prog = single_op_program(
+        "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
+        {"I": ((12, 16, 8), "int8"), "F": ((3, 3, 8, 16), "int8"),
+         "O": ((12, 16, 16), "int32")},
+        out="O",
+    )
+    blk = prog.entry.stmts[0]
+    params = dict(PAPER_FIG4.passes[0][1])
+    tiles, best = choose_tiling(blk, PAPER_FIG4, params)
+    ref = evaluate_tiling(blk, {"x": 3, "y": 4}, PAPER_FIG4, params)
+    assert best.feasible and best.mem_elems <= 512
+    assert abs(best.cost - ref.cost) < 1e-12  # same optimum as the paper's example
+    assert tiles["x"] == 3 and tiles["y"] == 4
+
+
+def test_all_archs_build_and_param_counts_sane():
+    expected_scale = {
+        "xlstm-125m": (0.08e9, 0.4e9),
+        "nemotron-4-15b": (12e9, 20e9),
+        "chatglm3-6b": (5e9, 9e9),
+        "llama3-8b": (6e9, 10e9),
+        "qwen3-4b": (3e9, 6e9),
+        "qwen3-moe-30b-a3b": (25e9, 36e9),
+        "dbrx-132b": (110e9, 150e9),
+        "internvl2-26b": (18e9, 30e9),
+        "seamless-m4t-large-v2": (1.5e9, 4e9),
+        "zamba2-2.7b": (2e9, 4e9),
+    }
+    for name, (lo, hi) in expected_scale.items():
+        n = configs.get(name).param_count()
+        assert lo < n < hi, f"{name}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_roofline_analysis_runs_on_recorded_results():
+    import json
+    import os
+
+    from repro.launch.roofline import analyze, markdown_table
+
+    path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "dryrun_baseline.json")
+    if not os.path.exists(path):
+        import pytest
+
+        pytest.skip("no dry-run results recorded")
+    rows = analyze(json.load(open(path)))
+    assert len(rows) >= 60  # 32 cells x 2 meshes
+    assert all(r["roofline_fraction"] <= 1.0 + 1e-9 for r in rows)
+    table = markdown_table(rows)
+    assert "dominant" in table
+
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo_stats import collective_stats
+
+    hlo = """
+ENTRY %main {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %ag = f32[64,16]{1,0} all-gather(%p0), replica_groups={}
+  %w = f32[64,16]{1,0} while(%ag), condition=%cond.1, body=%body.2
+}
+%body.2 (x: f32[64,16]) -> f32[64,16] {
+  %x = f32[64,16]{1,0} parameter(0)
+  %ar = f32[64,16]{1,0} all-reduce(%x), to_apply=%add
+}
+"""
+    stats = collective_stats(hlo, body_multiplier=10)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["operand_bytes"] == 8 * 16 * 4
+    assert stats["all-reduce"]["count"] == 10  # body multiplied
+    assert stats["all-reduce"]["operand_bytes"] == 64 * 16 * 4 * 10
