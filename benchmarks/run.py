@@ -1,5 +1,8 @@
 """Benchmark harness — one function per paper table/figure plus framework
-benches.  Prints ``name,us_per_call,derived`` CSV rows.
+benches.  Prints ``name,us_per_call,derived`` CSV rows; ``--json OUT.json``
+additionally writes the same records as machine-readable JSON
+(``[{name, us_per_call, derived}, ...]``) so CI can archive perf
+trajectories; ``--only fig4,fig5`` selects a subset.
 
 Paper artifacts (Stripe has no numeric tables; its quantitative artifacts
 are the Fig. 1 engineering-effort comparison and the Fig. 4/5 autotiling
@@ -12,15 +15,27 @@ example, both reproduced exactly):
 * fig5: the tiling rewrite — wall-clock of the XLA-compiled lowering
   before/after the pass pipeline (semantics asserted equal).
 
-Framework benches: Stripe-matmul kernel vs plain einsum (CPU wall time),
-per-arch reduced train step, flash-attention block-size choice, and the
-§Perf hillclimb (see stripe_hillclimb.py).
+Framework benches: the stripe_jit compile cache (cold vs warm-memory vs
+warm-disk), Stripe-matmul kernel vs plain einsum (CPU wall time), per-arch
+reduced train step, flash-attention block-size choice, and the §Perf
+hillclimb (see stripe_hillclimb.py).
 """
+import argparse
+import json
 import time
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+RESULTS: List[Dict[str, Any]] = []
+
+
+def emit(name: str, us_per_call: float, derived: Any) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+    RESULTS.append({"name": name, "us_per_call": round(float(us_per_call), 2),
+                    "derived": derived})
 
 
 def _timeit(fn, *args, n=5, warmup=2):
@@ -46,9 +61,9 @@ def bench_fig1_engineering_effort() -> None:
     kernel_lib = n_ops * n_hw * n_arch          # per-op-per-hw-per-shape family
     schedule_space = n_ops * n_hw + n_ops       # spaces + algorithms
     stripe = n_ops + n_hw                       # algorithms + configs
-    print(f"fig1_artifacts_kernel_library,{0.0:.2f},{kernel_lib}")
-    print(f"fig1_artifacts_schedule_space,{0.0:.2f},{schedule_space}")
-    print(f"fig1_artifacts_stripe,{0.0:.2f},{stripe}")
+    emit("fig1_artifacts_kernel_library", 0.0, kernel_lib)
+    emit("fig1_artifacts_schedule_space", 0.0, schedule_space)
+    emit("fig1_artifacts_stripe", 0.0, stripe)
 
 
 def bench_fig4_autotile() -> None:
@@ -69,10 +84,10 @@ def bench_fig4_autotile() -> None:
     t0 = time.perf_counter()
     tiles, best = choose_tiling(blk, PAPER_FIG4, params)
     dt = (time.perf_counter() - t0) * 1e6
-    print(f"fig4_cost_fig5b_tiling,0.00,{ref.cost:.6f}")
-    print(f"fig4_lines_per_tilepair,0.00,{ref.lines / ref.n_tiles:.0f}")
-    print(f"fig4_autotile_best_cost,{dt:.2f},{best.cost:.6f}")
-    print(f"fig4_autotile_tiles,0.00,\"{tiles}\"")
+    emit("fig4_cost_fig5b_tiling", 0.0, f"{ref.cost:.6f}")
+    emit("fig4_lines_per_tilepair", 0.0, f"{ref.lines / ref.n_tiles:.0f}")
+    emit("fig4_autotile_best_cost", dt, f"{best.cost:.6f}")
+    emit("fig4_autotile_tiles", 0.0, f"\"{tiles}\"")
 
 
 def bench_fig5_rewrite() -> None:
@@ -102,9 +117,44 @@ def bench_fig5_rewrite() -> None:
     equal = bool(np.allclose(a, b, rtol=1e-4, atol=1e-5))
     fn = jax.jit(lambda d: lower_program_jnp(opt.source)(d)["O"])
     dt_exec = _timeit(fn, {k: jnp.asarray(v) for k, v in arrays.items()})
-    print(f"fig5_pass_pipeline_compile,{dt_compile:.2f},1")
-    print(f"fig5_semantics_preserved,0.00,{int(equal)}")
-    print(f"fig5_conv_exec_jnp,{dt_exec:.2f},1")
+    emit("fig5_pass_pipeline_compile", dt_compile, 1)
+    emit("fig5_semantics_preserved", 0.0, int(equal))
+    emit("fig5_conv_exec_jnp", dt_exec, 1)
+
+
+def bench_stripe_jit_cache() -> None:
+    """Tentpole metric: warm vs cold ``stripe_jit`` compile of the Fig. 5
+    conv — in-memory hit and cross-process (disk tiling replay) warm."""
+    import tempfile
+
+    from repro.core import CompilationCache, single_op_program, stripe_jit
+    from repro.core.hwconfig import CPU_TEST
+
+    def conv():
+        return single_op_program(
+            "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
+            {"I": ((12, 16, 8), "float32"), "F": ((3, 3, 8, 16), "float32"),
+             "O": ((12, 16, 16), "float32")},
+            out="O",
+        )
+
+    with tempfile.TemporaryDirectory() as d:
+        cache = CompilationCache(disk_dir=d)
+        t0 = time.perf_counter()
+        stripe_jit(conv(), CPU_TEST, cache=cache)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        stripe_jit(conv(), CPU_TEST, cache=cache)
+        warm_mem = time.perf_counter() - t0
+        # fresh cache instance over the same disk dir = a new process
+        cache2 = CompilationCache(disk_dir=d)
+        t0 = time.perf_counter()
+        cp = stripe_jit(conv(), CPU_TEST, cache=cache2)
+        warm_disk = time.perf_counter() - t0
+        assert cp.record.disk_hit
+    emit("stripe_jit_compile_cold", cold * 1e6, 1)
+    emit("stripe_jit_compile_warm_mem", warm_mem * 1e6, f"{cold / warm_mem:.0f}x")
+    emit("stripe_jit_compile_warm_disk", warm_disk * 1e6, f"{cold / warm_disk:.1f}x")
 
 
 def bench_stripe_matmul() -> None:
@@ -116,18 +166,32 @@ def bench_stripe_matmul() -> None:
     t_ref = _timeit(jax.jit(lambda a, b: matmul_ref(a, b)), x, w)
     got = matmul(x, w, interpret=True)
     err = float(jnp.max(jnp.abs(got - matmul_ref(x, w))))
-    print(f"stripe_matmul_ref_xla,{t_ref:.2f},1")
-    print(f"stripe_matmul_pallas_interpret_maxerr,0.00,{err:.2e}")
+    emit("stripe_matmul_ref_xla", t_ref, 1)
+    emit("stripe_matmul_pallas_interpret_maxerr", 0.0, f"{err:.2e}")
 
 
 def bench_flash_attention_blocks() -> None:
+    import tempfile
+
+    from repro.core import CompilationCache, set_default_cache
     from repro.kernels.flash_attention.ops import choose_block_sizes
 
-    for s in (4096, 32768):
-        t0 = time.perf_counter()
-        bq, bk = choose_block_sizes(s, s, 128)
-        dt = (time.perf_counter() - t0) * 1e6
-        print(f"flash_attn_autotile_s{s},{dt:.2f},\"bq={bq} bk={bk}\"")
+    # isolate from ~/.cache/stripe-repro so the "cold" rows are really cold
+    with tempfile.TemporaryDirectory() as d:
+        set_default_cache(CompilationCache(disk_dir=d))
+        try:
+            for s in (4096, 32768):
+                t0 = time.perf_counter()
+                bq, bk = choose_block_sizes(s, s, 128)
+                dt = (time.perf_counter() - t0) * 1e6
+                emit(f"flash_attn_autotile_s{s}", dt, f"\"bq={bq} bk={bk}\"")
+                # second call: served from the compilation cache
+                t0 = time.perf_counter()
+                choose_block_sizes(s, s, 128)
+                dt_warm = (time.perf_counter() - t0) * 1e6
+                emit(f"flash_attn_autotile_s{s}_cached", dt_warm, f"\"bq={bq} bk={bk}\"")
+        finally:
+            set_default_cache(None)
 
 
 def bench_arch_steps() -> None:
@@ -141,23 +205,56 @@ def bench_arch_steps() -> None:
         batch = make_batch(cfg, "train", 2, 32)
         fn = jax.jit(lambda p, b: m.loss(p, b, remat=False)[0])
         dt = _timeit(fn, params, batch, n=3, warmup=1)
-        print(f"arch_train_step_reduced/{name},{dt:.2f},1")
+        emit(f"arch_train_step_reduced/{name}", dt, 1)
 
 
 def bench_hillclimb() -> None:
-    from . import stripe_hillclimb
+    try:
+        from . import stripe_hillclimb  # python -m benchmarks.run
+    except ImportError:
+        import stripe_hillclimb  # python benchmarks/run.py
 
-    stripe_hillclimb.main()
+    stripe_hillclimb.main(emit=emit)
 
 
-def main() -> None:
-    bench_fig1_engineering_effort()
-    bench_fig4_autotile()
-    bench_fig5_rewrite()
-    bench_stripe_matmul()
-    bench_flash_attention_blocks()
-    bench_hillclimb()
-    bench_arch_steps()
+BENCHES = {
+    "fig1": bench_fig1_engineering_effort,
+    "fig4": bench_fig4_autotile,
+    "fig5": bench_fig5_rewrite,
+    "cache": bench_stripe_jit_cache,
+    "matmul": bench_stripe_matmul,
+    "flash": bench_flash_attention_blocks,
+    "hillclimb": bench_hillclimb,
+    "arch": bench_arch_steps,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="OUT.json", default=None,
+                    help="also write records as JSON to this path")
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {','.join(BENCHES)}")
+    args = ap.parse_args(argv)
+
+    selected = list(BENCHES)
+    if args.only:
+        selected = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in selected if s not in BENCHES]
+        if unknown:
+            ap.error(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
+    if args.json:
+        # fail on an unwritable path now, not after minutes of benching
+        try:
+            open(args.json, "a").close()
+        except OSError as e:
+            ap.error(f"cannot write --json path: {e}")
+    for name in selected:
+        BENCHES[name]()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(RESULTS, f, indent=2)
+        print(f"# wrote {len(RESULTS)} records to {args.json}")
 
 
 if __name__ == "__main__":

@@ -38,35 +38,39 @@ def _block():
     return prog, prog.entry.stmts[0]
 
 
-def _report(name, cost, extra=""):
+def _default_emit(name, us, derived):
+    print(f"{name},{us:.2f},{derived}")
+
+
+def _report(name, cost, extra="", emit=_default_emit):
     ideal = 2.0 * M * K * N / PEAK
     t = max(cost.t_mem, cost.t_compute)
     frac = ideal / t if t else 0.0
-    print(f"stripe_hillclimb/{name},{t*1e6:.2f},{frac:.4f}{extra}")
+    emit(f"stripe_hillclimb/{name}", t * 1e6, f"{frac:.4f}{extra}")
     return t, frac
 
 
-def main() -> None:
+def main(emit=_default_emit) -> None:
     prog, blk = _block()
 
     # it0: whole-op "tile" (flat): footprint check
     c0 = evaluate_tiling(blk, {}, TPU_V5E, PARAMS)
-    print(f"stripe_hillclimb/flat_infeasible,{0.0:.2f},{int(c0.feasible)}  # {c0.why or 'fits'}")
+    emit("stripe_hillclimb/flat_infeasible", 0.0, f"{int(c0.feasible)}  # {c0.why or 'fits'}")
 
     # it1: naive 256^3 square tiles
     c1 = evaluate_tiling(blk, {"i": 128, "c": 128, "j": 128}, TPU_V5E, PARAMS)
-    _report("naive_128cube", c1)
+    _report("naive_128cube", c1, emit=emit)
     c1b = evaluate_tiling(blk, {"i": 512, "c": 512, "j": 512}, TPU_V5E, PARAMS)
-    _report("naive_512cube", c1b)
+    _report("naive_512cube", c1b, emit=emit)
 
     # it2: autotile
     tiles, c2 = choose_tiling(blk, TPU_V5E, PARAMS)
-    _report("autotile", c2, extra=f"  # tiles={tiles}")
+    _report("autotile", c2, extra=f"  # tiles={tiles}", emit=emit)
 
     # it3: stencil utilization — force MXU multiples
     snapped = {v: max(128, (t // 128) * 128) if t >= 128 else t for v, t in tiles.items()}
     c3 = evaluate_tiling(blk, snapped, TPU_V5E, {**PARAMS, "stencil": "mxu"})
-    _report("stenciled", c3, extra=f"  # tiles={snapped}")
+    _report("stenciled", c3, extra=f"  # tiles={snapped}", emit=emit)
 
     # it4: fusion — bias+silu epilogue folded into the same tiles (the
     # intermediate T never goes to HBM): model it by dropping one full
@@ -76,7 +80,7 @@ def main() -> None:
 
     c4 = dataclasses.replace(c3, bytes_hbm=c3.bytes_hbm - saved,
                              t_mem=(c3.bytes_hbm - saved) / TPU_V5E.mem_units[0].bandwidth)
-    _report("fused_epilogue", c4)
+    _report("fused_epilogue", c4, emit=emit)
 
     # confirm the fused kernel actually builds through the real pipeline
     from repro.core.ir import Block
@@ -94,7 +98,7 @@ def main() -> None:
     blocks = [s for s in out.entry.stmts if isinstance(s, Block)]
     # boundary may split a fused grid into interior/boundary pieces
     fused = len(blocks) >= 1 and all("fused" in b.tags for b in blocks)
-    print(f"stripe_hillclimb/pipeline_fuses_ffn,{0.0:.2f},{int(fused)}")
+    emit("stripe_hillclimb/pipeline_fuses_ffn", 0.0, int(fused))
 
 
 if __name__ == "__main__":

@@ -61,7 +61,37 @@ def run_generated_kernel():
     print("max |err| vs oracle:", float(jnp.max(jnp.abs(got - want))))
 
 
+def jit_with_cache():
+    """The unified driver: one call runs frontend -> passes -> lowering
+    behind the two-level compilation cache; the second compile is a cache
+    hit and skips the autotile search entirely."""
+    import time
+
+    from repro.core import CompilationCache, stripe_jit
+    from repro.core.hwconfig import CPU_TEST
+
+    print("=" * 70)
+    print("stripe_jit: compile driver + persistent compilation cache")
+    cache = CompilationCache()  # disk at $STRIPE_CACHE_DIR or ~/.cache/stripe-repro
+    text = "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]"
+    tensors = {"I": ((12, 16, 8), "float32"), "F": ((3, 3, 8, 16), "float32"),
+               "O": ((12, 16, 16), "float32")}
+    t0 = time.perf_counter()
+    compiled = stripe_jit(text, CPU_TEST, tensors=tensors, out="O", cache=cache)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    stripe_jit(text, CPU_TEST, tensors=tensors, out="O", cache=cache)
+    warm = time.perf_counter() - t0
+    rng = np.random.RandomState(0)
+    out = compiled({"I": rng.randn(12, 16, 8).astype(np.float32),
+                    "F": rng.randn(3, 3, 8, 16).astype(np.float32)})["O"]
+    print(f"cold compile {cold*1e3:.1f} ms  (tilings={compiled.record.tilings})")
+    print(f"warm compile {warm*1e6:.0f} us  ({cold/warm:.0f}x faster)")
+    print(f"output shape {out.shape}; cache stats {cache.stats.as_dict()}")
+
+
 if __name__ == "__main__":
     fig5_rewrite()
     pass_by_pass()
     run_generated_kernel()
+    jit_with_cache()

@@ -17,10 +17,13 @@ from .ir import (
     Store,
     TensorDecl,
 )
+from .ir import canonical_ir, ir_fingerprint
 from .frontend import TileProgram, single_op_program
 from .interp import execute_reference
 from .lower_jnp import lower_block_jnp, lower_program_jnp
 from .validate import validate_program
+from .cache import CompilationCache, get_default_cache, set_default_cache
+from .driver import CompiledProgram, compile_cached, stripe_jit
 
 __all__ = [
     "Affine", "aff", "Constraint", "Index", "Polyhedron",
@@ -28,4 +31,7 @@ __all__ = [
     "Location", "Program", "RefDir", "Refinement", "Special", "Store",
     "TensorDecl", "TileProgram", "single_op_program", "execute_reference",
     "lower_block_jnp", "lower_program_jnp", "validate_program",
+    "canonical_ir", "ir_fingerprint",
+    "CompilationCache", "get_default_cache", "set_default_cache",
+    "CompiledProgram", "compile_cached", "stripe_jit",
 ]

@@ -1,0 +1,237 @@
+"""Two-level compilation cache.
+
+Stripe's pitch is that *compilation* is the unit of reuse, which only
+works if compiling is cheap enough for the serving hot path.  Following
+Tensor Comprehensions' compilation-cache design, this module provides:
+
+* an **in-memory LRU** holding live compiled artifacts (optimized
+  programs, lowered callables) keyed by a content hash, and
+* an **on-disk store** (``$STRIPE_CACHE_DIR`` or ``~/.cache/stripe-repro``)
+  persisting the JSON-serializable part of a compile — chosen tilings and
+  the pass trace — across processes, so a warm process skips the autotile
+  search entirely.
+
+Keys are content hashes (sha256 over a canonical JSON form), never object
+identities, so equal programs hash equal across processes.  Disk entries
+are versioned and self-identifying; corrupt or stale entries are deleted
+and treated as misses.  All levels expose hit/miss/evict statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from collections import OrderedDict
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+CACHE_VERSION = 1
+
+ENV_CACHE_DIR = "STRIPE_CACHE_DIR"
+ENV_CACHE_DISABLE = "STRIPE_CACHE_DISABLE"
+
+
+# --------------------------------------------------------------------------
+# Content hashing
+# --------------------------------------------------------------------------
+def stable_json(obj: Any) -> str:
+    """Deterministic JSON: sorted keys, no whitespace, tuples as lists.
+    Non-JSON values fall back to ``str()`` (hashing, not round-tripping)."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"), default=str)
+
+
+def stable_hash(obj: Any) -> str:
+    return hashlib.sha256(stable_json(obj).encode()).hexdigest()
+
+
+def content_key(*parts: Any) -> str:
+    """Cache key from heterogeneous parts (fingerprints, params, names)."""
+    return stable_hash(list(parts))
+
+
+def default_cache_dir() -> Path:
+    env = os.environ.get(ENV_CACHE_DIR)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "stripe-repro"
+
+
+# --------------------------------------------------------------------------
+# Stats
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    puts: int = 0
+    disk_hits: int = 0
+    disk_misses: int = 0
+    disk_errors: int = 0
+    disk_puts: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+# --------------------------------------------------------------------------
+# The cache
+# --------------------------------------------------------------------------
+class CompilationCache:
+    """In-memory LRU of live objects + on-disk JSON artifact store.
+
+    The two levels hold different things: memory holds whatever the caller
+    puts (typically a ``CompiledProgram``); disk holds only the JSON
+    ``payload`` passed to :meth:`put` (typically tilings + pass trace).
+    ``get`` consults memory first, then disk, and reports which level hit
+    by type: a disk hit returns the payload dict, a memory hit the live
+    object.
+    """
+
+    def __init__(self, capacity: int = 128, disk_dir: Optional[os.PathLike] = None,
+                 use_disk: bool = True):
+        self.capacity = int(capacity)
+        self.stats = CacheStats()
+        self._mem: "OrderedDict[str, Any]" = OrderedDict()
+        if os.environ.get(ENV_CACHE_DISABLE):
+            use_disk = False
+        self.disk_dir: Optional[Path] = None
+        if use_disk:
+            self.disk_dir = Path(disk_dir) if disk_dir is not None else default_cache_dir()
+
+    # ------------------------------------------------------------- memory
+    def get_memory(self, key: str) -> Any:
+        if key in self._mem:
+            self._mem.move_to_end(key)
+            self.stats.hits += 1
+            return self._mem[key]
+        self.stats.misses += 1
+        return None
+
+    def put_memory(self, key: str, value: Any) -> None:
+        self._mem[key] = value
+        self._mem.move_to_end(key)
+        self.stats.puts += 1
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+            self.stats.evictions += 1
+
+    # --------------------------------------------------------------- disk
+    def _path(self, key: str) -> Optional[Path]:
+        if self.disk_dir is None:
+            return None
+        return self.disk_dir / f"{key}.json"
+
+    def get_disk(self, key: str) -> Optional[Dict[str, Any]]:
+        path = self._path(key)
+        if path is None:
+            return None
+        try:
+            raw = path.read_text()
+        except OSError:
+            self.stats.disk_misses += 1
+            return None
+        try:
+            entry = json.loads(raw)
+            if not isinstance(entry, dict):
+                raise ValueError("entry is not an object")
+            if entry.get("version") != CACHE_VERSION or entry.get("key") != key:
+                raise ValueError("stale or mismatched entry")
+            payload = entry["payload"]
+        except (ValueError, KeyError, TypeError):
+            # corrupt/stale on-disk entry: delete it, treat as a miss
+            self.stats.disk_errors += 1
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return None
+        self.stats.disk_hits += 1
+        return payload
+
+    def put_disk(self, key: str, payload: Dict[str, Any]) -> None:
+        path = self._path(key)
+        if path is None:
+            return
+        entry = {"version": CACHE_VERSION, "key": key, "payload": payload}
+        try:
+            data = json.dumps(entry, sort_keys=True)
+        except (TypeError, ValueError):
+            self.stats.disk_errors += 1
+            return
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            # atomic publish: no reader ever sees a half-written entry
+            fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    f.write(data)
+                os.replace(tmp, path)
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+        except OSError:
+            self.stats.disk_errors += 1
+            return
+        self.stats.disk_puts += 1
+
+    # ----------------------------------------------------------- combined
+    def get(self, key: str) -> Any:
+        """Memory first, then disk.  A memory hit returns the live object;
+        a disk hit returns the JSON payload dict."""
+        val = self.get_memory(key)
+        if val is not None:
+            return val
+        return self.get_disk(key)
+
+    def put(self, key: str, value: Any, payload: Optional[Dict[str, Any]] = None) -> None:
+        self.put_memory(key, value)
+        if payload is not None:
+            self.put_disk(key, payload)
+
+    def clear(self, memory: bool = True, disk: bool = False) -> None:
+        if memory:
+            self._mem.clear()
+        if disk and self.disk_dir is not None and self.disk_dir.exists():
+            for p in self.disk_dir.glob("*.json"):
+                try:
+                    p.unlink()
+                except OSError:
+                    pass
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+
+# --------------------------------------------------------------------------
+# Process-wide default cache
+# --------------------------------------------------------------------------
+_DEFAULT: Optional[CompilationCache] = None
+
+
+def get_default_cache() -> CompilationCache:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = CompilationCache()
+    return _DEFAULT
+
+
+def set_default_cache(cache: Optional[CompilationCache]) -> None:
+    global _DEFAULT
+    _DEFAULT = cache
+
+
+def memoize(kind: str, parts: Any, compute: Callable[[], Any],
+            cache: Optional[CompilationCache] = None) -> Any:
+    """Memoize a JSON-serializable decision (e.g. a kernel block-size
+    choice) through both cache levels, keyed by content."""
+    c = cache if cache is not None else get_default_cache()
+    key = content_key("memo", kind, parts)
+    hit = c.get(key)
+    if isinstance(hit, dict) and "value" in hit:
+        return hit["value"]
+    value = compute()
+    c.put(key, {"value": value}, payload={"value": value})
+    return value

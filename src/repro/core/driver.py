@@ -1,0 +1,218 @@
+"""The unified compile driver: frontend -> passes -> lowering, cached.
+
+``stripe_jit`` is the single entry point tying the pieces together behind
+the two-level compilation cache (``cache.py``):
+
+1. the input (a ``Program``, ``TileProgram``, Tile contraction string, or
+   a callable producing one) is built into a Stripe ``Program``;
+2. a content key is computed from the canonical IR, the hardware config
+   fingerprint, and the backend;
+3. **memory hit** — the live ``CompiledProgram`` is returned immediately;
+   **disk hit** — the persisted tilings replay through the pass pipeline
+   via a ``TilingOracle`` (no autotile search); **miss** — the full
+   pipeline runs (optionally with the parallel autotuner) and both cache
+   levels are populated;
+4. the optimized program is lowered by the requested backend:
+   ``jnp`` (XLA via the reference lowering, jit'd), ``pallas`` (the tiled
+   TPU kernel, falling back to jnp when the block shape is unsupported),
+   or ``reference`` (the exact numpy interpreter).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
+
+from . import cache as _cache
+from .frontend import TileProgram, single_op_program
+from .hwconfig import HardwareConfig
+from .interp import execute_reference
+from .ir import Block, Program, ir_fingerprint
+from .lower_jnp import lower_program_jnp
+from .passes import PassManager, TilingOracle
+
+DRIVER_VERSION = 1
+
+BACKENDS = ("jnp", "pallas", "reference")
+
+
+@dataclasses.dataclass
+class CompileRecord:
+    """What happened during one ``stripe_jit`` call."""
+
+    key: str
+    backend: str  # backend actually used (may record a pallas->jnp fallback)
+    hw_name: str
+    cache_hit: bool = False  # in-memory (same-process) hit
+    disk_hit: bool = False  # tilings replayed from the on-disk store
+    compile_time_s: float = 0.0
+    tilings: Dict[str, Dict[str, int]] = dataclasses.field(default_factory=dict)
+    pass_trace: List = dataclasses.field(default_factory=list)
+    fallback_reason: str = ""
+
+
+class CompiledProgram:
+    """A compiled Stripe program: callable on a dict of input arrays,
+    returning a dict of output arrays."""
+
+    def __init__(self, program: Program, fn: Callable[[Mapping[str, Any]], Dict[str, Any]],
+                 hw: HardwareConfig, record: CompileRecord):
+        self.program = program
+        self.hw = hw
+        self.record = record
+        self._fn = fn
+
+    @property
+    def outputs(self) -> List[str]:
+        return list(self.program.outputs)
+
+    def __call__(self, arrays: Mapping[str, Any]) -> Dict[str, Any]:
+        return self._fn(arrays)
+
+
+# --------------------------------------------------------------------------
+# Input normalization
+# --------------------------------------------------------------------------
+def _as_program(fn_or_contraction, tensors=None, out=None, ranges=None, name="op") -> Program:
+    obj = fn_or_contraction
+    if callable(obj) and not isinstance(obj, (Program, TileProgram)):
+        obj = obj()
+    if isinstance(obj, TileProgram):
+        obj = obj.build()
+    if isinstance(obj, str):
+        if tensors is None or out is None:
+            raise ValueError("contraction-string input needs tensors= and out=")
+        obj = single_op_program(obj, tensors, out=out, ranges=ranges, name=name)
+    if not isinstance(obj, Program):
+        raise TypeError(f"cannot compile {type(obj).__name__}; "
+                        "expected Program, TileProgram, contraction str, or a callable producing one")
+    return obj
+
+
+# --------------------------------------------------------------------------
+# Lowering
+# --------------------------------------------------------------------------
+def _lower(opt: Program, backend: str, interpret: bool, jit: bool) -> Tuple[Callable, str, str]:
+    """Returns (fn(arrays)->outputs dict, backend used, fallback reason)."""
+    semantic = opt.source or opt
+    if backend == "reference":
+        return (lambda arrays: execute_reference(semantic, arrays)), backend, ""
+    if backend == "pallas":
+        from .lower_pallas import UnsupportedPallas, lower_op_pallas
+
+        blocks = [s for s in opt.entry.stmts if isinstance(s, Block)]
+        reason = ""
+        if len(blocks) != 1:
+            reason = f"expected one optimized op block, got {len(blocks)}"
+        else:
+            try:
+                kernel = lower_op_pallas(blocks[0], interpret=interpret)
+                out_name = opt.outputs[0]
+                return (lambda arrays: {out_name: kernel(arrays)}), backend, ""
+            except UnsupportedPallas as e:
+                reason = str(e)
+        backend, fallback = "jnp", reason
+    else:
+        fallback = ""
+    fn = lower_program_jnp(semantic)
+    if jit:
+        import jax
+
+        fn = jax.jit(fn)
+    return fn, backend, fallback
+
+
+# --------------------------------------------------------------------------
+# Driver entry points
+# --------------------------------------------------------------------------
+def compile_cached(prog: Program, hw: HardwareConfig,
+                   cache: Optional[_cache.CompilationCache] = None,
+                   workers: Optional[int] = None,
+                   use_disk: bool = True) -> Tuple[Program, CompileRecord]:
+    """Run the pass pipeline under the compilation cache; no lowering.
+
+    Returns a deep copy on memory hits so callers can mutate freely.
+    """
+    if cache is None:
+        cache = _cache.get_default_cache()
+    t0 = time.perf_counter()
+    key = _cache.content_key(
+        "compile", DRIVER_VERSION, _cache.CACHE_VERSION,
+        ir_fingerprint(prog), hw.fingerprint(),
+    )
+    hit = cache.get_memory(key)
+    if isinstance(hit, Program):
+        rec = CompileRecord(key=key, backend="", hw_name=hw.name, cache_hit=True,
+                            compile_time_s=time.perf_counter() - t0)
+        return copy.deepcopy(hit), rec
+    payload = cache.get_disk(key) if use_disk else None
+    oracle = TilingOracle(known=(payload or {}).get("tilings"))
+    pm = PassManager(hw, oracle=oracle, autotune_workers=workers)
+    opt = pm.run(copy.deepcopy(prog))
+    rec = CompileRecord(key=key, backend="", hw_name=hw.name,
+                        disk_hit=payload is not None,
+                        compile_time_s=time.perf_counter() - t0,
+                        tilings=dict(oracle.chosen), pass_trace=list(pm.trace))
+    cache.put_memory(key, opt)
+    if use_disk:
+        cache.put_disk(key, {"tilings": oracle.chosen, "pass_trace": pm.trace,
+                             "hw": hw.name, "compile_time_s": rec.compile_time_s})
+    return copy.deepcopy(opt), rec
+
+
+def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
+               hw: HardwareConfig, backend: str = "jnp", *,
+               tensors: Optional[Mapping[str, Tuple]] = None,
+               out: Optional[str] = None,
+               ranges: Optional[Mapping[str, int]] = None,
+               cache: Optional[_cache.CompilationCache] = None,
+               workers: Optional[int] = None,
+               interpret: bool = True,
+               jit: bool = True,
+               use_disk: bool = True) -> CompiledProgram:
+    """Compile a tensor op end-to-end through the cached Stripe pipeline.
+
+    ``workers`` enables the parallel autotune search on cold compiles;
+    ``interpret`` selects Pallas interpret mode (CPU validation) for the
+    pallas backend; ``cache`` defaults to the process-wide cache.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if cache is None:
+        cache = _cache.get_default_cache()
+    t0 = time.perf_counter()
+    prog = _as_program(fn_or_contraction, tensors=tensors, out=out, ranges=ranges)
+    key = _cache.content_key(
+        "stripe_jit", DRIVER_VERSION, _cache.CACHE_VERSION,
+        ir_fingerprint(prog), hw.fingerprint(), backend, bool(interpret), bool(jit),
+    )
+    hit = cache.get_memory(key)
+    if isinstance(hit, CompiledProgram):
+        # fresh record per call: never mutate the cached one (the cold
+        # caller holds it), and report this call's lookup time
+        rec = dataclasses.replace(hit.record, cache_hit=True, disk_hit=False,
+                                  compile_time_s=time.perf_counter() - t0)
+        return CompiledProgram(hit.program, hit._fn, hit.hw, rec)
+
+    payload = cache.get_disk(key) if use_disk else None
+    oracle = TilingOracle(known=(payload or {}).get("tilings"))
+    pm = PassManager(hw, oracle=oracle, autotune_workers=workers)
+    opt = pm.run(copy.deepcopy(prog))
+    fn, used_backend, fallback = _lower(opt, backend, interpret, jit)
+    record = CompileRecord(
+        key=key, backend=used_backend, hw_name=hw.name,
+        cache_hit=False, disk_hit=payload is not None,
+        compile_time_s=time.perf_counter() - t0,
+        tilings=dict(oracle.chosen), pass_trace=list(pm.trace),
+        fallback_reason=fallback,
+    )
+    compiled = CompiledProgram(opt, fn, hw, record)
+    cache.put_memory(key, compiled)
+    if use_disk:
+        cache.put_disk(key, {
+            "tilings": oracle.chosen, "pass_trace": pm.trace,
+            "hw": hw.name, "backend": used_backend,
+            "compile_time_s": record.compile_time_s,
+        })
+    return compiled

@@ -51,6 +51,21 @@ class HardwareConfig:
     def inner_mem(self) -> MemoryUnit:
         return self.mem_units[1] if len(self.mem_units) > 1 else self.mem_units[0]
 
+    def fingerprint(self) -> str:
+        """Stable content hash of everything that can change compilation
+        output: memory hierarchy, stencils, roofline terms, and the pass
+        pipeline with its parameters (order-sensitive; param-key order is
+        not).  Used as the hardware component of compilation-cache keys."""
+        from .cache import stable_hash
+
+        return stable_hash([
+            "hwconfig", self.name,
+            [[m.name, m.size_bytes, m.bandwidth, m.cache_line_elems] for m in self.mem_units],
+            [[s.name, list(s.dims), s.flops] for s in self.stencils],
+            self.peak_flops, self.ici_link_bw,
+            [[name, sorted(params.items())] for name, params in self.passes],
+        ])
+
     def with_params(self, **overrides) -> "HardwareConfig":
         """The paper's ``set_config_params``: per-HW-version tweak of pass
         parameters without rewriting the config."""

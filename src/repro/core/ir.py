@@ -343,3 +343,67 @@ DTYPE_BYTES = {
 
 def dtype_bytes(dtype: str) -> int:
     return DTYPE_BYTES[dtype]
+
+
+# --------------------------------------------------------------------------
+# Stable content hashing (compilation-cache keys)
+# --------------------------------------------------------------------------
+def _canon_ref(r: Refinement):
+    return [
+        "ref", r.dir, r.from_buf, r.into,
+        [str(o) for o in r.offsets], list(r.shape), r.dtype,
+        list(r.strides) if r.strides else None, r.agg,
+        str(r.location) if r.location else None, sorted(r.tags),
+    ]
+
+
+def _canon_stmt(s: Statement):
+    if isinstance(s, Block):
+        return _canon_block(s)
+    if isinstance(s, Load):
+        return ["load", s.buf, s.into]
+    if isinstance(s, Store):
+        return ["store", s.buf, s.scalar]
+    if isinstance(s, Intrinsic):
+        return ["intr", s.op, list(s.args), s.into]
+    if isinstance(s, Constant):
+        return ["const", repr(s.value), s.into]
+    if isinstance(s, Special):
+        return ["special", s.op, list(s.ins), list(s.outs),
+                sorted((k, str(v)) for k, v in s.attrs.items())]
+    raise TypeError(f"unknown statement {s!r}")
+
+
+def _canon_block(b: Block):
+    # ``comments`` is excluded: free-form notes carry no semantics.
+    return [
+        "block", b.name,
+        [[i.name, i.range, str(i.affine) if i.affine is not None else None] for i in b.idxs],
+        [str(c.expr) for c in b.constraints],
+        [_canon_ref(r) for r in b.refs],
+        sorted(b.tags), list(b.passed),
+        [_canon_stmt(s) for s in b.stmts],
+    ]
+
+
+def canonical_ir(obj: Union[Program, Block]):
+    """Canonical (JSON-able) form of a program or block: deterministic
+    across processes and insensitive to non-semantic state — tag/set
+    insertion order, buffer-dict insertion order, comments, and the
+    pristine ``source`` back-pointer."""
+    if isinstance(obj, Block):
+        return _canon_block(obj)
+    return [
+        "program",
+        sorted([d.name, list(d.shape), d.dtype] for d in obj.buffers.values()),
+        list(obj.inputs), list(obj.outputs),
+        _canon_block(obj.entry),
+    ]
+
+
+def ir_fingerprint(obj: Union[Program, Block]) -> str:
+    """sha256 content hash of :func:`canonical_ir` — the IR component of a
+    compilation-cache key."""
+    from .cache import stable_hash
+
+    return stable_hash(canonical_ir(obj))

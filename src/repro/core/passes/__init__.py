@@ -4,10 +4,18 @@ iteratively applied to the IR").
 
 Passes are generic and hardware-agnostic; the hardware config selects and
 parameterizes them.  Each pass maps Program -> Program.
+
+The pass manager threads two compilation-cache hooks through the pipeline
+(both injected into pass params under private ``_``-prefixed keys, which
+are never part of a pass's own parameterization):
+
+* a ``TilingOracle`` that records the autotiler's chosen tilings on a cold
+  compile and replays them on a warm one, skipping the search entirely;
+* an ``autotune_workers`` override enabling the parallel candidate search.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Mapping
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 from ..hwconfig import HardwareConfig
 from ..ir import Program
@@ -30,10 +38,40 @@ def get_pass(name: str) -> PassFn:
     return _REGISTRY[name]
 
 
+class TilingOracle:
+    """Record/replay store for autotile decisions, keyed by block name.
+
+    Cold compile: every searched tiling is recorded into ``chosen``.
+    Warm compile: construct with ``known`` (e.g. loaded from the on-disk
+    cache) and the autotile pass replays those tilings instead of
+    searching, re-evaluating only the (cheap) cost of the known choice.
+    """
+
+    def __init__(self, known: Optional[Mapping[str, Mapping[str, int]]] = None):
+        self.known: Dict[str, Dict[str, int]] = {
+            name: {v: int(t) for v, t in tiles.items()}
+            for name, tiles in (known or {}).items()
+        }
+        self.chosen: Dict[str, Dict[str, int]] = {}
+        self.replays = 0
+        self.searches = 0
+
+    def lookup(self, block_name: str) -> Optional[Dict[str, int]]:
+        return self.known.get(block_name)
+
+    def record(self, block_name: str, tiles: Mapping[str, int]) -> None:
+        self.chosen[block_name] = dict(tiles)
+
+
 class PassManager:
-    def __init__(self, hw: HardwareConfig):
+    def __init__(self, hw: HardwareConfig, oracle: Optional[TilingOracle] = None,
+                 autotune_workers: Optional[int] = None):
         self.hw = hw
-        self.trace: list = []
+        self.oracle = oracle
+        self.autotune_workers = autotune_workers
+        # (pass name, public params) in application order — JSON-able, so
+        # the driver can persist it as the compile's pass trace.
+        self.trace: List[Tuple[str, Dict]] = []
 
     def run(self, prog: Program) -> Program:
         import copy
@@ -43,8 +81,14 @@ class PassManager:
         source = prog.source or copy.deepcopy(prog)
         for name, params in self.hw.passes:
             fn = _REGISTRY[name]
-            prog = fn(prog, self.hw, params)
-            self.trace.append(name)
+            run_params = dict(params)
+            if name == "autotile":
+                if self.oracle is not None:
+                    run_params["_oracle"] = self.oracle
+                if self.autotune_workers is not None and "workers" not in run_params:
+                    run_params["workers"] = self.autotune_workers
+            prog = fn(prog, self.hw, run_params)
+            self.trace.append((name, dict(params)))
         prog.source = source
         return prog
 

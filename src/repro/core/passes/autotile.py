@@ -3,10 +3,23 @@
 Explores a space of tile shapes under memory-capacity and stencil-multiple
 constraints with a cost function (cache-lines/MAC or TPU roofline, per the
 hardware config) and rewrites the chosen tiling via ``split_block``.
+
+Two additions over the plain exhaustive search:
+
+* **Oracle replay** — when the pass manager injects a ``TilingOracle``
+  (``params["_oracle"]``) with a known tiling for a block, the search is
+  skipped and the recorded tiling replayed (warm compile path).
+* **Parallel search** — ``params["workers"] > 1`` evaluates candidate
+  chunks across a ``concurrent.futures`` process pool.  Tie-breaking is
+  deterministic: candidates are globally indexed in serial enumeration
+  order and the reduction takes the minimum of ``(cost, index)``, which is
+  exactly the serial loop's first-best-wins rule — the parallel search
+  always picks the identical tiling.
 """
 from __future__ import annotations
 
 import itertools
+import os
 from typing import Dict, List, Mapping, Optional, Tuple
 
 from ..cost import TileCost, evaluate_tiling
@@ -15,6 +28,11 @@ from ..ir import Block, Program
 from ..poly import factors
 from ..tiling import split_block
 from . import register
+
+ENV_WORKERS = "STRIPE_AUTOTUNE_WORKERS"
+
+# below this many candidates, process spawn overhead dwarfs the search
+PARALLEL_MIN_COMBOS = 2048
 
 
 def _candidates(r: int, search: str) -> List[int]:
@@ -30,6 +48,92 @@ def _candidates(r: int, search: str) -> List[int]:
         t *= 2
     out.append(r)
     return out
+
+
+def _resolve_workers(params: Mapping) -> int:
+    w = params.get("workers")
+    if w is None:
+        w = os.environ.get(ENV_WORKERS)
+    if w == "auto":
+        return os.cpu_count() or 1
+    try:
+        return max(int(w), 1)
+    except (TypeError, ValueError):
+        # unset, empty, or garbage: parallelism is optional — never fail
+        # a compile over it
+        return 1
+
+
+def _search_chunk(block: Block, hw: HardwareConfig, params: Dict, names: List[str],
+                  combos: List[Tuple[int, ...]], base: int,
+                  macs_exact=()):
+    """Best feasible candidate in one chunk: (cost, global index, tiles)."""
+    if macs_exact != ():
+        # The exact MAC count (an expensive polyhedron enumeration) is
+        # cached by block identity, which a pickled copy loses — seed the
+        # worker's cache with the parent's precomputed value.
+        from ..cost import _MACS_CACHE
+
+        _MACS_CACHE[id(block)] = macs_exact
+    best = None
+    for j, combo in enumerate(combos):
+        tiles = dict(zip(names, combo))
+        c = evaluate_tiling(block, tiles, hw, params)
+        if not c.feasible:
+            continue
+        if best is None or c.cost < best[0]:
+            best = (c.cost, base + j, tiles, c)
+    return best
+
+
+def _search_serial(block, hw, params, names, cands):
+    best: Optional[Tuple[Dict[str, int], TileCost]] = None
+    for combo in itertools.product(*(cands[v] for v in names)):
+        tiles = dict(zip(names, combo))
+        c = evaluate_tiling(block, tiles, hw, params)
+        if not c.feasible:
+            continue
+        if best is None or c.cost < best[1].cost:
+            best = (tiles, c)
+    return best
+
+
+def _search_parallel(block, hw, params, names, cands, workers):
+    import concurrent.futures
+    import multiprocessing
+
+    combos = list(itertools.product(*(cands[v] for v in names)))
+    # strip private injected state (oracles etc.) before shipping to workers
+    clean = {k: v for k, v in params.items() if not k.startswith("_")}
+    macs_exact = ()
+    if params.get("exact_macs"):
+        from ..cost import count_macs_exact
+
+        macs_exact = count_macs_exact(block)
+    chunk = max(1, -(-len(combos) // (workers * 4)))
+    try:
+        # forkserver: children fork from a clean single-threaded server
+        # process, never from this (jax-threaded) one; workers only import
+        # the pure-python cost model, so startup stays cheap
+        try:
+            ctx = multiprocessing.get_context("forkserver")
+        except ValueError:
+            ctx = multiprocessing.get_context("fork")
+        with concurrent.futures.ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as ex:
+            futs = [
+                ex.submit(_search_chunk, block, hw, clean, names,
+                          combos[i:i + chunk], i, macs_exact)
+                for i in range(0, len(combos), chunk)
+            ]
+            results = [f.result() for f in futs]
+    except (OSError, ValueError, RuntimeError):
+        # no fork / pool failure: the serial path is always available
+        return _search_serial(block, hw, params, names, cands)
+    best = min((r for r in results if r is not None),
+               key=lambda r: (r[0], r[1]), default=None)
+    if best is None:
+        return None
+    return best[2], best[3]
 
 
 def choose_tiling(block: Block, hw: HardwareConfig, params: Mapping) -> Tuple[Dict[str, int], TileCost]:
@@ -52,14 +156,12 @@ def choose_tiling(block: Block, hw: HardwareConfig, params: Mapping) -> Tuple[Di
         # coordinate-descent fallback: greedy per-dim refinement
         return _coordinate_descent(block, hw, params, free, cands)
 
-    best: Optional[Tuple[Dict[str, int], TileCost]] = None
-    for combo in itertools.product(*(cands[v] for v in names)):
-        tiles = dict(zip(names, combo))
-        c = evaluate_tiling(block, tiles, hw, params)
-        if not c.feasible:
-            continue
-        if best is None or c.cost < best[1].cost:
-            best = (tiles, c)
+    workers = _resolve_workers(params)
+    min_combos = params.get("parallel_min_combos", PARALLEL_MIN_COMBOS)
+    if workers > 1 and n_combos >= min_combos:
+        best = _search_parallel(block, hw, params, names, cands, workers)
+    else:
+        best = _search_serial(block, hw, params, names, cands)
     if best is None:
         # nothing feasible: fall back to all-ones tiles (always fits)
         tiles = {v: 1 for v in names}
@@ -90,13 +192,24 @@ def _coordinate_descent(block, hw, params, free, cands):
 
 @register("autotile")
 def autotile_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
+    oracle = params.get("_oracle")
     new_stmts = []
     for s in prog.entry.stmts:
         if not isinstance(s, Block) or not ({"contraction", "elementwise"} & s.tags) or "grid" in s.tags:
             new_stmts.append(s)
             continue
-        tiles, cost = choose_tiling(s, hw, params)
         free = {i.name: i.range for i in s.idxs if not i.is_passthrough()}
+        known = oracle.lookup(s.name) if oracle is not None else None
+        if known is not None:
+            tiles = {v: t for v, t in known.items() if v in free}
+            cost = evaluate_tiling(s, tiles, hw, params)
+            oracle.replays += 1
+        else:
+            tiles, cost = choose_tiling(s, hw, params)
+            if oracle is not None:
+                oracle.searches += 1
+        if oracle is not None:
+            oracle.record(s.name, tiles)
         if all(tiles.get(v, free[v]) >= free[v] for v in free) and cost.feasible:
             # whole op fits in one tile: keep flat, mark it
             s.add_tag("fits_inner")

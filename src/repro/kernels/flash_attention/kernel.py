@@ -25,22 +25,38 @@ NEG_INF = -1e30
 
 def choose_block_sizes(seq_q: int, seq_k: int, head_dim: int) -> Tuple[int, int]:
     """Stripe autotiler picks (block_q, block_k) for the attention score
-    contraction S[q,k] += Q[q,d] * K[k,d]."""
-    from ...core.frontend import single_op_program
-    from ...core.hwconfig import TPU_V5E
-    from ...core.passes.autotile import choose_tiling
+    contraction S[q,k] += Q[q,d] * K[k,d].
 
-    prog = single_op_program(
-        "S[q, k] += Q[q, d] * K[k, d]",
-        {"Q": ((seq_q, head_dim), "bfloat16"), "K": ((seq_k, head_dim), "bfloat16"),
-         "S": ((seq_q, seq_k), "float32")},
-        out="S",
-    )
+    The search result is memoized through the compilation cache (memory
+    LRU + on-disk store), so repeated calls — and warm processes — skip
+    the autotile search entirely.
+    """
+    from ...core import cache as stripe_cache
+    from ...core.hwconfig import TPU_V5E
+
     params = {"cost": "roofline", "search": "pow2", "mem_cap_frac": 0.2, "count_untiled": True}
-    tiles, _cost = choose_tiling(prog.entry.stmts[0], TPU_V5E, params)
-    bq = max(min(tiles.get("q", 512), seq_q), min(128, seq_q))
-    bk = max(min(tiles.get("k", 512), seq_k), min(128, seq_k))
-    return bq, bk
+    memo_version = 1  # bump when the clamp logic below changes
+
+    def search():
+        from ...core.frontend import single_op_program
+        from ...core.passes.autotile import choose_tiling
+
+        prog = single_op_program(
+            "S[q, k] += Q[q, d] * K[k, d]",
+            {"Q": ((seq_q, head_dim), "bfloat16"), "K": ((seq_k, head_dim), "bfloat16"),
+             "S": ((seq_q, seq_k), "float32")},
+            out="S",
+        )
+        tiles, _cost = choose_tiling(prog.entry.stmts[0], TPU_V5E, params)
+        bq = max(min(tiles.get("q", 512), seq_q), min(128, seq_q))
+        bk = max(min(tiles.get("k", 512), seq_k), min(128, seq_k))
+        return [bq, bk]
+
+    bq, bk = stripe_cache.memoize(
+        "flash_attn_blocks",
+        [memo_version, seq_q, seq_k, head_dim, sorted(params.items()), TPU_V5E.fingerprint()],
+        search)
+    return int(bq), int(bk)
 
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,

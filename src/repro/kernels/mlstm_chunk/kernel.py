@@ -31,25 +31,34 @@ from jax.experimental.pallas import tpu as pltpu
 
 def choose_chunk(seq: int, dk: int, dv: int) -> int:
     """Stripe autotiler chooses the chunk length for the intra-chunk
-    contraction H[t,p] += S[t,s] * V[s,p]."""
-    from ...core.frontend import single_op_program
+    contraction H[t,p] += S[t,s] * V[s,p]; memoized through the
+    compilation cache so warm processes skip the search."""
+    from ...core import cache as stripe_cache
     from ...core.hwconfig import TPU_V5E
-    from ...core.passes.autotile import choose_tiling
 
-    prog = single_op_program(
-        "H[t, p] += S[t, s] * V[s, p]",
-        {"S": ((seq, seq), "float32"), "V": ((seq, dv), "float32"),
-         "H": ((seq, dv), "float32")},
-        out="H",
-    )
-    tiles, _ = choose_tiling(
-        prog.entry.stmts[0], TPU_V5E,
-        {"cost": "roofline", "search": "pow2", "mem_cap_frac": 0.1},
-    )
-    c = min(tiles.get("t", 256), 256)
-    while seq % c != 0:
-        c //= 2
-    return max(c, 1)
+    params = {"cost": "roofline", "search": "pow2", "mem_cap_frac": 0.1}
+    memo_version = 1  # bump when the clamp logic below changes
+
+    def search():
+        from ...core.frontend import single_op_program
+        from ...core.passes.autotile import choose_tiling
+
+        prog = single_op_program(
+            "H[t, p] += S[t, s] * V[s, p]",
+            {"S": ((seq, seq), "float32"), "V": ((seq, dv), "float32"),
+             "H": ((seq, dv), "float32")},
+            out="H",
+        )
+        tiles, _ = choose_tiling(prog.entry.stmts[0], TPU_V5E, params)
+        c = min(tiles.get("t", 256), 256)
+        while seq % c != 0:
+            c //= 2
+        return max(c, 1)
+
+    return int(stripe_cache.memoize(
+        "mlstm_chunk_len",
+        [memo_version, seq, dk, dv, sorted(params.items()), TPU_V5E.fingerprint()],
+        search))
 
 
 def _gla_kernel(q_ref, k_ref, v_ref, ld_ref, g_ref, o_ref, c_ref, n_ref, *,

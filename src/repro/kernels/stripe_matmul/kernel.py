@@ -11,6 +11,7 @@ from __future__ import annotations
 import functools
 from typing import Callable, Optional
 
+from ...core.driver import compile_cached
 from ...core.frontend import TileProgram
 from ...core.hwconfig import TPU_V5E
 from ...core.ir import Block
@@ -40,7 +41,9 @@ def build_matmul_kernel(m: int, k: int, n: int, dtype: str = "float32",
     else:
         tp.output("O", (m, n), dtype)
         tp.op("O[i, j] += X[i, c] * W[c, j]")
-    prog = compile_program(tp.build(), TPU_V5E)
+    # the persistent compilation cache replays the tiling choice on warm
+    # processes; the lru_cache above only helps within this one
+    prog, _record = compile_cached(tp.build(), TPU_V5E)
     blocks = [s for s in prog.entry.stmts if isinstance(s, Block)]
     assert len(blocks) == 1, f"expected one fused block, got {len(blocks)}"
     fn = lower_op_pallas(blocks[0], interpret=interpret)

@@ -10,11 +10,14 @@ compile exactly once per (batch, length) bucket.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..core import cache as stripe_cache
 
 
 @dataclasses.dataclass
@@ -28,7 +31,8 @@ class Request:
 
 
 class ServingEngine:
-    def __init__(self, model, batch_slots: int, max_len: int):
+    def __init__(self, model, batch_slots: int, max_len: int,
+                 compile_cache: Optional[stripe_cache.CompilationCache] = None):
         self.model = model
         self.cfg = model.cfg
         self.slots = batch_slots
@@ -36,9 +40,28 @@ class ServingEngine:
         self._queue: List[Request] = []
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
+        # per-(slots, prompt-length) bucket compile log: jax.jit compiles
+        # once per static shape; the compilation cache tracks which buckets
+        # are warm and how long each cold bucket's first trace took, so the
+        # serving path reports real hit/miss traffic.
+        self._compile_cache = (compile_cache if compile_cache is not None
+                               else stripe_cache.CompilationCache(capacity=64, use_disk=False))
+        self._compile_log: List[Dict[str, Any]] = []
 
     def submit(self, req: Request) -> None:
         self._queue.append(req)
+
+    def cache_stats(self) -> stripe_cache.CacheStats:
+        """Hit/miss stats over (batch, length) compile buckets."""
+        return self._compile_cache.stats
+
+    def compile_log(self) -> List[Dict[str, Any]]:
+        """One record per cold bucket: shapes + first-call (compile) time."""
+        return list(self._compile_log)
+
+    def _bucket(self, plen: int) -> str:
+        return stripe_cache.content_key(
+            "serve_bucket", getattr(self.cfg, "name", ""), self.slots, plen)
 
     def _next_wave(self) -> List[Request]:
         wave = self._queue[: self.slots]
@@ -66,7 +89,16 @@ class ServingEngine:
                 batch["patches"] = jnp.zeros((self.slots, self.cfg.frontend_len, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
             if self.cfg.frontend == "frames":
                 batch["frames"] = jnp.zeros((self.slots, plen, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
+            bucket = self._bucket(plen)
+            cold = self._compile_cache.get_memory(bucket) is None
+            t0 = time.perf_counter()
             logits, cache = self._prefill(params, batch, cache)
+            jax.block_until_ready(logits)
+            if cold:
+                rec = {"slots": self.slots, "plen": plen,
+                       "first_call_s": time.perf_counter() - t0}
+                self._compile_cache.put_memory(bucket, rec)
+                self._compile_log.append(rec)
             last = np.asarray(jnp.argmax(logits[:, -1, : self.cfg.vocab], axis=-1))
             live = np.array([i < len(wave) for i in range(self.slots)])
             for i, r in enumerate(wave):

@@ -1,0 +1,120 @@
+"""Test configuration.
+
+When the real ``hypothesis`` package is unavailable (it is pinned in the
+``[dev]`` extra and installed in CI, but some sandboxes cannot install
+packages), install a minimal deterministic fallback into ``sys.modules``
+so the property tests still collect and run.  The fallback implements
+only the slice of the API these tests use — ``@given``/``@settings`` and
+the ``integers``/``sampled_from``/``dictionaries`` strategies — drawing a
+fixed number of pseudo-random examples from a per-test seeded RNG (no
+shrinking, no database).
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+import zlib
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _isolated_stripe_cache(tmp_path, monkeypatch):
+    """Keep the compilation cache out of the user's real ~/.cache: every
+    test gets a private disk dir and a fresh process-default cache, so no
+    test is ever served a stale entry written by older code."""
+    from repro.core import cache as stripe_cache
+
+    monkeypatch.setenv(stripe_cache.ENV_CACHE_DIR, str(tmp_path / "stripe-cache"))
+    monkeypatch.delenv(stripe_cache.ENV_CACHE_DISABLE, raising=False)
+    stripe_cache.set_default_cache(None)
+    yield
+    stripe_cache.set_default_cache(None)
+
+try:
+    import hypothesis  # noqa: F401  (the real one wins when present)
+except ModuleNotFoundError:
+    class _Strategy:
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.min_value, self.max_value = min_value, max_value
+
+        def example(self, rng):
+            return rng.randint(self.min_value, self.max_value)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng):
+            return rng.choice(self.elements)
+
+    class _Dictionaries(_Strategy):
+        def __init__(self, keys, values, dict_class=dict, min_size=0, max_size=None):
+            self.keys, self.values = keys, values
+            self.dict_class = dict_class
+            self.min_size = min_size
+            self.max_size = min_size + 4 if max_size is None else max_size
+
+        def example(self, rng):
+            size = rng.randint(self.min_size, self.max_size)
+            out = self.dict_class()
+            for _ in range(100):
+                if len(out) >= size:
+                    break
+                k = self.keys.example(rng)
+                if k not in out:
+                    out[k] = self.values.example(rng)
+            return out
+
+    def _given(*strats, **kwstrats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_fallback_max_examples", 20)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = tuple(s.example(rng) for s in strats)
+                    kdrawn = {k: s.example(rng) for k, s in kwstrats.items()}
+                    fn(*args, *drawn, **kwargs, **kdrawn)
+
+            # pytest must see a zero-arg signature (drawn args are not
+            # fixtures), so drop the wraps-added signature forwarding
+            del wrapper.__wrapped__
+            # mimic real hypothesis: plugins (e.g. anyio) reach for
+            # fn.hypothesis.inner_test
+            wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+            return wrapper
+
+        return deco
+
+    def _settings(max_examples=100, deadline=None, **_ignored):
+        def deco(fn):
+            # functools.wraps copies __dict__, so this survives either
+            # decorator order relative to @given
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = lambda min_value, max_value: _Integers(min_value, max_value)
+    st_mod.sampled_from = lambda elements: _SampledFrom(elements)
+    st_mod.dictionaries = (
+        lambda keys, values, dict_class=dict, min_size=0, max_size=None:
+        _Dictionaries(keys, values, dict_class, min_size, max_size)
+    )
+
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = _given
+    hyp_mod.settings = _settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.__fallback__ = True
+
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -1,0 +1,75 @@
+"""Parallel autotune: the worker-pool search must pick the identical
+tiling to the serial path (deterministic tie-breaking), and complete an
+exhaustive search space in reasonable time."""
+import time
+
+from repro.core import single_op_program
+from repro.core.hwconfig import PAPER_FIG4, TPU_V5E
+from repro.core.passes.autotile import choose_tiling
+
+
+def _fig4_conv_block():
+    prog = single_op_program(
+        "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
+        {"I": ((12, 16, 8), "int8"), "F": ((3, 3, 8, 16), "int8"),
+         "O": ((12, 16, 16), "int32")},
+        out="O",
+    )
+    return prog.entry.stmts[0]
+
+
+def test_parallel_matches_serial_on_fig4_conv():
+    blk = _fig4_conv_block()
+    params = dict(PAPER_FIG4.passes[0][1])
+    tiles_s, cost_s = choose_tiling(blk, PAPER_FIG4, params)
+    tiles_p, cost_p = choose_tiling(
+        blk, PAPER_FIG4, dict(params, workers=2, parallel_min_combos=1))
+    assert tiles_s == tiles_p
+    assert cost_s.cost == cost_p.cost
+    # the paper's Fig. 4 answer: a 3x4 output tile
+    assert (tiles_s["x"], tiles_s["y"]) == (3, 4)
+
+
+def test_parallel_matches_serial_on_roofline_pow2():
+    prog = single_op_program(
+        "O[i, j] += X[i, c] * W[c, j]",
+        {"X": ((2048, 1024), "bfloat16"), "W": ((1024, 2048), "bfloat16"),
+         "O": ((2048, 2048), "bfloat16")},
+        out="O",
+    )
+    params = {"cost": "roofline", "search": "pow2", "mem_cap_frac": 0.45,
+              "count_untiled": True}
+    tiles_s, cost_s = choose_tiling(prog.entry.stmts[0], TPU_V5E, params)
+    tiles_p, cost_p = choose_tiling(
+        prog.entry.stmts[0], TPU_V5E,
+        dict(params, workers=2, parallel_min_combos=1))
+    assert tiles_s == tiles_p and cost_s.cost == cost_p.cost
+
+
+def test_parallel_exhaustive_speed_smoke():
+    prog = single_op_program(
+        "O[i, j] += A[i, c] * B[c, j]",
+        {"A": ((32, 32), "float32"), "B": ((32, 32), "float32"),
+         "O": ((32, 32), "float32")},
+        out="O",
+    )
+    blk = prog.entry.stmts[0]
+    params = {"cost": "cache_lines", "search": "exhaustive", "mem_cap_elems": 2048}
+    t0 = time.perf_counter()
+    tiles_s, cost_s = choose_tiling(blk, PAPER_FIG4, params)
+    t_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tiles_p, cost_p = choose_tiling(blk, PAPER_FIG4, dict(params, workers=2))
+    t_parallel = time.perf_counter() - t0
+    assert tiles_s == tiles_p and cost_s.cost == cost_p.cost
+    # smoke, not a strict benchmark: the pool must not be pathologically
+    # slower than the serial loop (generous bound for 2-core CI runners)
+    assert t_parallel < max(t_serial * 3, 5.0), (t_serial, t_parallel)
+
+
+def test_workers_one_is_serial_path():
+    blk = _fig4_conv_block()
+    params = dict(PAPER_FIG4.passes[0][1])
+    tiles_a, _ = choose_tiling(blk, PAPER_FIG4, dict(params, workers=1))
+    tiles_b, _ = choose_tiling(blk, PAPER_FIG4, params)
+    assert tiles_a == tiles_b

@@ -1,0 +1,195 @@
+"""Compilation cache + driver tests: key stability, hit/miss/evict
+semantics, corrupt-entry recovery, env-var override, warm-vs-cold compile
+speed, and equality of cached vs freshly-compiled results."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompilationCache,
+    execute_reference,
+    ir_fingerprint,
+    single_op_program,
+    stripe_jit,
+)
+from repro.core.cache import content_key, default_cache_dir
+from repro.core.driver import compile_cached
+from repro.core.hwconfig import CPU_TEST, PAPER_FIG4, TPU_V5E
+
+
+def _conv_prog(dtype="float32"):
+    return single_op_program(
+        "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
+        {"I": ((12, 16, 8), dtype), "F": ((3, 3, 8, 16), dtype),
+         "O": ((12, 16, 16), dtype)},
+        out="O",
+    )
+
+
+def _conv_arrays(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"I": rng.randn(12, 16, 8).astype(np.float32),
+            "F": rng.randn(3, 3, 8, 16).astype(np.float32)}
+
+
+# ------------------------------------------------------------ key stability
+def test_ir_fingerprint_stable_across_builds():
+    assert ir_fingerprint(_conv_prog()) == ir_fingerprint(_conv_prog())
+
+
+def test_ir_fingerprint_ignores_nonsemantic_fields():
+    a, b = _conv_prog(), _conv_prog()
+    # comments and tag insertion order are non-semantic
+    a.entry.stmts[0].comments = "scribble"
+    a.entry.stmts[0].tags = set(list(a.entry.stmts[0].tags)[::-1])
+    b.entry.stmts[0].add_tag("zz_marker")
+    b.entry.stmts[0].tags.discard("zz_marker")
+    # buffer-dict insertion order is non-semantic
+    a.buffers = dict(reversed(list(a.buffers.items())))
+    assert ir_fingerprint(a) == ir_fingerprint(b)
+
+
+def test_ir_fingerprint_sees_semantic_changes():
+    base = ir_fingerprint(_conv_prog())
+    assert ir_fingerprint(_conv_prog(dtype="bfloat16")) != base
+    other = _conv_prog()
+    other.entry.stmts[0].add_tag("elementwise")  # tags steer passes
+    assert ir_fingerprint(other) != base
+
+
+def test_hwconfig_fingerprint_distinguishes_params():
+    assert CPU_TEST.fingerprint() != TPU_V5E.fingerprint()
+    assert CPU_TEST.fingerprint() == CPU_TEST.fingerprint()
+    tweaked = TPU_V5E.with_params(**{"autotile.search": "divisors"})
+    assert tweaked.fingerprint() != TPU_V5E.fingerprint()
+
+
+# --------------------------------------------------------- hit/miss/evict
+def test_memory_hit_miss_evict_stats():
+    c = CompilationCache(capacity=2, use_disk=False)
+    assert c.get("k1") is None
+    c.put("k1", "v1")
+    c.put("k2", "v2")
+    assert c.get("k1") == "v1" and c.get("k2") == "v2"
+    c.put("k3", "v3")  # evicts LRU (k1)
+    assert c.get("k1") is None
+    s = c.stats
+    assert s.hits == 2 and s.misses == 2 and s.evictions == 1 and s.puts == 3
+
+
+def test_disk_roundtrip_and_env_override(tmp_path, monkeypatch):
+    monkeypatch.setenv("STRIPE_CACHE_DIR", str(tmp_path))
+    assert default_cache_dir() == tmp_path
+    c = CompilationCache()
+    assert c.disk_dir == tmp_path
+    key = content_key("unit", 1)
+    c.put_disk(key, {"tilings": {"op0": {"x": 3}}})
+    assert list(tmp_path.glob("*.json")), "entry not persisted"
+    # a fresh instance (= another process) reads it back
+    c2 = CompilationCache()
+    assert c2.get_disk(key) == {"tilings": {"op0": {"x": 3}}}
+    assert c2.stats.disk_hits == 1
+
+
+def test_disk_corrupt_entry_recovery(tmp_path):
+    c = CompilationCache(disk_dir=tmp_path)
+    key = content_key("corrupt")
+    c.put_disk(key, {"v": 1})
+    path = tmp_path / f"{key}.json"
+    path.write_text("{ not json")
+    assert c.get_disk(key) is None
+    assert c.stats.disk_errors == 1
+    assert not path.exists(), "corrupt entry should be deleted"
+    # wrong-key (stale/moved) entries are also rejected
+    other = content_key("other")
+    (tmp_path / f"{other}.json").write_text(
+        json.dumps({"version": 1, "key": "someone-else", "payload": {}}))
+    assert c.get_disk(other) is None
+    assert c.stats.disk_errors == 2
+
+
+def test_cache_disable_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("STRIPE_CACHE_DISABLE", "1")
+    c = CompilationCache(disk_dir=tmp_path)
+    assert c.disk_dir is None
+    c.put_disk("k", {"v": 1})
+    assert not list(tmp_path.glob("*.json"))
+
+
+# ------------------------------------------------------------------ driver
+def test_stripe_jit_warm_10x_faster_than_cold(tmp_path):
+    cache = CompilationCache(disk_dir=tmp_path)
+    t0 = time.perf_counter()
+    cold = stripe_jit(_conv_prog(), CPU_TEST, cache=cache)
+    t_cold = time.perf_counter() - t0
+    assert not cold.record.cache_hit and not cold.record.disk_hit
+    assert cold.record.tilings, "cold compile must record tilings"
+
+    t0 = time.perf_counter()
+    warm = stripe_jit(_conv_prog(), CPU_TEST, cache=cache)
+    t_warm = time.perf_counter() - t0
+    assert warm.record.cache_hit
+    assert not cold.record.cache_hit, "warm lookup must not mutate the cold caller's record"
+    assert warm.record.tilings == cold.record.tilings
+    assert t_cold >= 10 * t_warm, f"warm {t_warm:.6f}s not 10x faster than cold {t_cold:.6f}s"
+
+    # cross-process warm: fresh cache over the same disk dir replays the
+    # recorded tilings with no autotile search
+    cache2 = CompilationCache(disk_dir=tmp_path)
+    t0 = time.perf_counter()
+    disk_warm = stripe_jit(_conv_prog(), CPU_TEST, cache=cache2)
+    t_disk = time.perf_counter() - t0
+    assert disk_warm.record.disk_hit and not disk_warm.record.cache_hit
+    assert disk_warm.record.tilings == cold.record.tilings
+    assert t_cold >= 10 * t_disk, f"disk-warm {t_disk:.6f}s not 10x faster than cold {t_cold:.6f}s"
+
+
+def test_cached_results_equal_fresh_and_reference(tmp_path):
+    arrays = _conv_arrays()
+    ref = execute_reference(_conv_prog(), arrays)["O"]
+    cache = CompilationCache(disk_dir=tmp_path)
+    fresh = stripe_jit(_conv_prog(), CPU_TEST, cache=cache)
+    replayed = stripe_jit(_conv_prog(), CPU_TEST, cache=CompilationCache(disk_dir=tmp_path))
+    a = np.asarray(fresh(arrays)["O"])
+    b = np.asarray(replayed(arrays)["O"])
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_allclose(a, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_stripe_jit_contraction_string_and_backends(tmp_path):
+    cache = CompilationCache(disk_dir=tmp_path)
+    tensors = {"A": ((32, 16), "float32"), "B": ((16, 24), "float32"),
+               "O": ((32, 24), "float32")}
+    rng = np.random.RandomState(0)
+    arrays = {"A": rng.randn(32, 16).astype(np.float32),
+              "B": rng.randn(16, 24).astype(np.float32)}
+    want = arrays["A"] @ arrays["B"]
+    for backend in ("jnp", "reference", "pallas"):
+        cp = stripe_jit("O[i, j] += A[i, c] * B[c, j]", CPU_TEST, backend,
+                        tensors=tensors, out="O", cache=cache)
+        got = np.asarray(cp(arrays)["O"])
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_stripe_jit_rejects_bad_input():
+    with pytest.raises(ValueError):
+        stripe_jit("O[i] += A[i]", CPU_TEST)  # no tensors/out
+    with pytest.raises(ValueError):
+        stripe_jit(_conv_prog(), CPU_TEST, backend="tpu_v9")
+    with pytest.raises(TypeError):
+        stripe_jit(123, CPU_TEST)
+
+
+def test_compile_cached_memory_hit_is_isolated_copy(tmp_path):
+    cache = CompilationCache(disk_dir=tmp_path)
+    prog = _conv_prog()
+    opt1, rec1 = compile_cached(prog, PAPER_FIG4, cache=cache)
+    assert not rec1.cache_hit
+    opt2, rec2 = compile_cached(prog, PAPER_FIG4, cache=cache)
+    assert rec2.cache_hit
+    # mutating one caller's copy must not leak into the cache
+    opt2.entry.stmts.clear()
+    opt3, _ = compile_cached(prog, PAPER_FIG4, cache=cache)
+    assert opt3.entry.stmts, "cache entry was mutated through a returned copy"
