@@ -27,7 +27,10 @@ from collections import OrderedDict
 from pathlib import Path
 from typing import Any, Callable, Dict, Optional
 
-CACHE_VERSION = 1
+# v2: tiling-oracle entries are keyed by block name + group fingerprint
+# (fusion-group tilings replay as a unit); v1 name-keyed payloads are
+# invalidated wholesale by the version bump.
+CACHE_VERSION = 2
 
 ENV_CACHE_DIR = "STRIPE_CACHE_DIR"
 ENV_CACHE_DISABLE = "STRIPE_CACHE_DISABLE"

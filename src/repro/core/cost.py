@@ -230,6 +230,87 @@ def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, 
                     n_tiles=n_tiles, feasible=feasible, why=why)
 
 
+# --------------------------------------------------------------------------
+# Fusion profitability (fusion-group formation, fuse.py)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class FusionDecision:
+    """One accepted/rejected merge during fusion-group formation.
+
+    The model arbitrates HBM bytes saved (the eliminated intermediate's
+    write + read) against HBM bytes added (inputs refetched once per grid
+    tile that revisits them) and VMEM arena pressure (the canonical tile's
+    footprint priced with schedule.py's address-assignment arithmetic)."""
+
+    group: str
+    member: str
+    kind: str  # "prologue" | "epilogue"
+    accepted: bool
+    hbm_saved: int = 0
+    hbm_added: int = 0
+    vmem_bytes: int = 0
+    vmem_cap: int = 0
+    reason: str = ""
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def canonical_tile(ranges: Mapping[str, int], params: Mapping,
+                   clamp_vars=None) -> Dict[str, int]:
+    """The tile shape the profitability model prices a group at — fusion
+    runs before autotiling, so merges are judged at a plausible tile (the
+    stencil-ish default 128, clamped to each range), not the final one.
+    Only ``clamp_vars`` (typically the anchor's output indices) are
+    clamped: a fused group keeps its whole reduction extent resident in
+    the inner memory, so reduction dims are priced at full range."""
+    ct = int(params.get("canonical_tile", 128))
+    if clamp_vars is None:
+        clamp_vars = set(ranges)
+    return {v: (min(r, ct) if v in clamp_vars else r) for v, r in ranges.items()}
+
+
+def tile_view_bytes(ref: Refinement, ranges: Mapping[str, int], tile: Mapping[str, int]) -> int:
+    """Bytes of one canonical-tile view of ``ref`` (span of the tiled
+    index extents through the ref's affine offsets, times dtype).
+    Variables absent from ``tile`` span their full range."""
+    elems = 1
+    for e, orig in zip(ref.offsets, ref.shape):
+        span = 0
+        for n, c in e.terms:
+            extent = tile.get(n, ranges.get(n, 1))
+            span += abs(c) * (extent - 1)
+        elems *= span + orig
+    return elems * dtype_bytes(ref.dtype)
+
+
+def refetch_bytes(ref_vars, free: Mapping[str, int], out_vars, tile: Mapping[str, int],
+                  full_bytes: int) -> int:
+    """Extra HBM traffic a fused read of ``full_bytes`` incurs: the buffer
+    is re-fetched once per grid tile along every *output* dimension that
+    does not address it (reduction dims revisit for free — the block stays
+    resident across the reduction, matching the Pallas emission)."""
+    revisits = 1
+    for v in out_vars:
+        if v not in ref_vars:
+            revisits *= ceil_div(free[v], tile.get(v, free[v]))
+    return full_bytes * max(revisits - 1, 0)
+
+
+def fusion_vmem_pressure(refs, ranges: Mapping[str, int], hw: HardwareConfig,
+                         params: Mapping, clamp_vars=None) -> Tuple[int, int, bool]:
+    """(arena bytes for one canonical tile of the candidate group, cap,
+    fits).  Pressure is priced with schedule.py's arena arithmetic and
+    doubled for the double-buffering headroom the autotiler also budgets."""
+    from .passes.schedule import arena_bytes
+
+    tile = canonical_tile(ranges, params, clamp_vars)
+    sizes = [tile_view_bytes(r, ranges, tile) for r in refs]
+    pressure = 2 * arena_bytes(sizes)
+    cap = int(hw.inner_mem().size_bytes * params.get("mem_cap_frac", 0.45))
+    return pressure, cap, pressure <= cap
+
+
 def _classify_mnk(block: Block, eff: Mapping[str, int]):
     """(m, n, k) tile extents for stencil utilization: n = output contiguous
     var, k = largest reduction var, m = product of remaining output vars."""

@@ -50,6 +50,22 @@ class CompileRecord:
     tilings: Dict[str, Dict[str, int]] = dataclasses.field(default_factory=dict)
     pass_trace: List = dataclasses.field(default_factory=list)
     fallback_reason: str = ""
+    # Per-group lowering: the semantic op-block names each fusion group
+    # absorbed, and the kernel count — for the pallas backend this is the
+    # actual pallas_call count per invocation; for jnp it is the fusion-
+    # group (compile-unit) count, though the driver still wraps the whole
+    # program in one outer jax.jit (use lower_program_jnp(jit_scope=
+    # "group") for per-group dispatch, as the fusion bench does); the
+    # reference interpreter launches no kernels and reports 0.
+    n_kernels: int = 0
+    groups: List[List[str]] = dataclasses.field(default_factory=list)
+
+    def fusion_decisions(self) -> List[Dict]:
+        """Accepted/rejected merges recorded by the fusion pass."""
+        for entry in self.pass_trace:
+            if entry[0] == "fuse" and len(entry) > 2:
+                return list(entry[2])
+        return []
 
 
 class CompiledProgram:
@@ -93,34 +109,59 @@ def _as_program(fn_or_contraction, tensors=None, out=None, ranges=None, name="op
 # --------------------------------------------------------------------------
 # Lowering
 # --------------------------------------------------------------------------
-def _lower(opt: Program, backend: str, interpret: bool, jit: bool) -> Tuple[Callable, str, str]:
-    """Returns (fn(arrays)->outputs dict, backend used, fallback reason)."""
-    semantic = opt.source or opt
-    if backend == "reference":
-        return (lambda arrays: execute_reference(semantic, arrays)), backend, ""
-    if backend == "pallas":
-        from .lower_pallas import UnsupportedPallas, lower_op_pallas
+def _semantic_groups(opt: Program) -> Optional[List[List[str]]]:
+    """Fusion groups of the optimized program as lists of *semantic*
+    op-block names (from each block's ``members:`` tag), or None when the
+    mapping does not cover the semantic program exactly (e.g. after
+    transpose-pass block insertion the driver lowers per op)."""
+    from .passes.fuse import members_of
 
-        blocks = [s for s in opt.entry.stmts if isinstance(s, Block)]
-        reason = ""
-        if len(blocks) != 1:
-            reason = f"expected one optimized op block, got {len(blocks)}"
-        else:
-            try:
-                kernel = lower_op_pallas(blocks[0], interpret=interpret)
-                out_name = opt.outputs[0]
-                return (lambda arrays: {out_name: kernel(arrays)}), backend, ""
-            except UnsupportedPallas as e:
-                reason = str(e)
-        backend, fallback = "jnp", reason
+    semantic = opt.source
+    if semantic is None:
+        return None
+    sem_names = {s.name for s in semantic.entry.stmts if isinstance(s, Block)}
+    groups: List[List[str]] = []
+    seen: set = set()
+    for s in opt.entry.stmts:
+        if not isinstance(s, Block):
+            continue
+        g = [n for n in members_of(s) if n in sem_names and n not in seen]
+        if g:
+            groups.append(g)
+            seen.update(g)
+    if seen != sem_names:
+        return None
+    return groups
+
+
+def _lower(opt: Program, backend: str, interpret: bool, jit: bool
+           ) -> Tuple[Callable, str, str, int, List[List[str]]]:
+    """Returns (fn(arrays)->outputs dict, backend used, fallback reason,
+    kernels launched per call, fusion groups)."""
+    semantic = opt.source or opt
+    groups = _semantic_groups(opt) or [
+        [s.name] for s in semantic.entry.stmts if isinstance(s, Block)]
+    if backend == "reference":
+        # the interpreter launches no kernels and ignores grouping
+        fn = lambda arrays: execute_reference(semantic, arrays)  # noqa: E731
+        return fn, backend, "", 0, groups
+    if backend == "pallas":
+        from .lower_pallas import UnsupportedPallas, lower_program_pallas
+
+        try:
+            fn = lower_program_pallas(opt, interpret=interpret)
+            return fn, backend, "", fn.n_kernels, groups
+        except UnsupportedPallas as e:
+            backend, fallback = "jnp", str(e)
     else:
         fallback = ""
-    fn = lower_program_jnp(semantic)
+    fn = lower_program_jnp(semantic, groups=groups)
+    n_kernels = fn.n_kernels
     if jit:
         import jax
 
         fn = jax.jit(fn)
-    return fn, backend, fallback
+    return fn, backend, fallback, n_kernels, groups
 
 
 # --------------------------------------------------------------------------
@@ -199,13 +240,13 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
     oracle = TilingOracle(known=(payload or {}).get("tilings"))
     pm = PassManager(hw, oracle=oracle, autotune_workers=workers)
     opt = pm.run(copy.deepcopy(prog))
-    fn, used_backend, fallback = _lower(opt, backend, interpret, jit)
+    fn, used_backend, fallback, n_kernels, groups = _lower(opt, backend, interpret, jit)
     record = CompileRecord(
         key=key, backend=used_backend, hw_name=hw.name,
         cache_hit=False, disk_hit=payload is not None,
         compile_time_s=time.perf_counter() - t0,
         tilings=dict(oracle.chosen), pass_trace=list(pm.trace),
-        fallback_reason=fallback,
+        fallback_reason=fallback, n_kernels=n_kernels, groups=groups,
     )
     compiled = CompiledProgram(opt, fn, hw, record)
     cache.put_memory(key, compiled)
@@ -214,5 +255,6 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
             "tilings": oracle.chosen, "pass_trace": pm.trace,
             "hw": hw.name, "backend": used_backend,
             "compile_time_s": record.compile_time_s,
+            "n_kernels": n_kernels, "groups": groups,
         })
     return compiled

@@ -378,34 +378,122 @@ def _out_region(op: FlatOp, buf_shape: Tuple[int, ...]) -> Tuple[Tuple[int, int]
     return tuple(region)
 
 
-def lower_program_jnp(prog: Program) -> Callable[[Mapping[str, jnp.ndarray]], Dict[str, jnp.ndarray]]:
-    """Lower every op block; returns fn(inputs)->outputs dict."""
-    plans = []
+class _LazyZeros(dict):
+    """Array environment that materializes a zero buffer on first read —
+    a fully-overwritten buffer never pays an init dispatch."""
+
+    def __init__(self, base: Mapping, buffers: Mapping):
+        super().__init__(base)
+        self._buffers = buffers
+
+    def __missing__(self, key):
+        d = self._buffers[key]
+        v = jnp.zeros(d.shape, np.dtype(d.dtype))
+        self[key] = v
+        return v
+
+
+def lower_program_jnp(prog: Program, groups: Optional[List[List[str]]] = None,
+                      jit_scope: Optional[str] = None
+                      ) -> Callable[[Mapping[str, jnp.ndarray]], Dict[str, jnp.ndarray]]:
+    """Lower every op block; returns fn(inputs)->outputs dict.
+
+    ``groups`` switches to **per-group lowering** (fusion groups from the
+    pass pipeline): each group of semantic op-block names becomes one
+    compiled unit, its internal intermediates stay local to the group
+    (never entering the program-level array environment or the returned
+    dict), and — with ``jit_scope="group"`` (or ``"op"`` for per-op
+    units) — each unit is wrapped in its own ``jax.jit``, so the group is
+    the dispatch granularity, mirroring the Pallas backend's
+    one-kernel-per-group contract.
+    """
+    plans: Dict[str, Tuple[Block, FlatOp, Callable]] = {}
+    order: List[str] = []
     for s in prog.entry.stmts:
         if not isinstance(s, Block):
             continue
         op = analyze_flat(s)
         fn = lower_block_jnp(s)
-        plans.append((s, op, fn))
+        plans[s.name] = (s, op, fn)
+        order.append(s.name)
+
+    if groups is None or sorted(n for g in groups for n in g) != sorted(order):
+        groups = [[n] for n in order]
+
+    # who reads each buffer, by op-block name (for internal-buffer elision)
+    readers: Dict[str, set] = {}
+    for name in order:
+        for r in plans[name][0].refs:
+            if r.dir in (RefDir.IN, RefDir.INOUT):
+                readers.setdefault(r.from_buf, set()).add(name)
+
+    elided: set = set()
+    group_fns = []
+    for g in groups:
+        written = {plans[n][1].out_ref.from_buf for n in g}
+        internal = {b for b in written
+                    if b not in prog.outputs
+                    and readers.get(b, set()) <= set(g)
+                    and b != plans[g[-1]][1].out_ref.from_buf}
+        elided |= internal
+        # the group's jit signature covers only what it touches — passing
+        # the whole program environment would add O(total buffers) pytree
+        # flattening per dispatch
+        needed = set(written)
+        for n in g:
+            for r in plans[n][0].refs:
+                if r.dir in (RefDir.IN, RefDir.INOUT):
+                    needed.add(r.from_buf)
+
+        def group_fn(arrays, g=tuple(g), internal=frozenset(internal)):
+            local = _LazyZeros(arrays, prog.buffers)
+            updates: Dict[str, jnp.ndarray] = {}
+            for name in g:
+                blk, op, fn = plans[name]
+                val = fn(local)
+                if op.agg != "assign" and len(g) > 1 and jax.default_backend() == "cpu":
+                    # Keep XLA CPU's library gemm: loop-fusing an expensive
+                    # elementwise epilogue (erf/gelu) into a dot consumer
+                    # drops the contraction off the fast gemm runtime.  The
+                    # barrier pins the dot, while the group's elementwise
+                    # members still fuse with each other.
+                    val = jax.lax.optimization_barrier(val)
+                buf = op.out_ref.from_buf
+                full = local.get(buf)
+                decl_shape = prog.buffers[buf].shape
+                region = _out_region(op, decl_shape)
+                out_shape_full = tuple(hi - lo for lo, hi in region)
+                val = val.reshape(out_shape_full)
+                if out_shape_full == decl_shape:
+                    new = val
+                else:
+                    if full is None:  # partially-written buffer: zero base
+                        full = jnp.zeros(decl_shape,
+                                         np.dtype(prog.buffers[buf].dtype))
+                    new = jax.lax.dynamic_update_slice(
+                        full, val.astype(full.dtype), tuple(lo for lo, _ in region))
+                local[buf] = new
+                if buf not in internal:
+                    updates[buf] = new
+            return updates
+
+        if jit_scope in ("op", "group"):
+            group_fn = jax.jit(group_fn)
+        group_fns.append((group_fn, frozenset(needed)))
 
     def run(inputs: Mapping[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
-        arrays: Dict[str, jnp.ndarray] = {}
+        # Buffers are materialized lazily: a fully-overwriting producer
+        # needs no zero-init dispatch; partially-written buffers start
+        # from zeros inside their group.
+        arrays: Dict[str, jnp.ndarray] = {
+            name: jnp.asarray(inputs[name]) for name in prog.inputs}
+        for gfn, needed in group_fns:
+            arrays.update(gfn({b: arrays[b] for b in needed if b in arrays}))
         for name, d in prog.buffers.items():
-            if name in prog.inputs:
-                arrays[name] = jnp.asarray(inputs[name])
-            else:
+            if name not in arrays and name not in prog.inputs and name not in elided:
                 arrays[name] = jnp.zeros(d.shape, np.dtype(d.dtype))
-        for blk, op, fn in plans:
-            val = fn(arrays)
-            buf = op.out_ref.from_buf
-            full = arrays[buf]
-            region = _out_region(op, full.shape)
-            out_shape_full = tuple(hi - lo for lo, hi in region)
-            val = val.reshape(out_shape_full)
-            if out_shape_full == full.shape:
-                arrays[buf] = val
-            else:
-                arrays[buf] = jax.lax.dynamic_update_slice(full, val.astype(full.dtype), tuple(lo for lo, _ in region))
-        return {n: arrays[n] for n in prog.buffers if n not in prog.inputs}
+        return {n: arrays[n] for n in prog.buffers
+                if n not in prog.inputs and n not in elided}
 
+    run.n_kernels = len(group_fns)
     return run

@@ -8,19 +8,27 @@ declarative BlockSpec (block shape + index_map); the optimization passes
 
 * the grid = the outer ("grid") block's iteration space, ordered so
   reduction indices vary fastest (output block revisiting => VMEM-resident
-  accumulation in a float32 scratch);
+  accumulation in a float32 scratch); parallel output dimensions are
+  declared via ``dimension_semantics`` so Mosaic may reorder/parallelize
+  them;
 * each refinement of the grid block becomes one BlockSpec: its view shape
   is the block shape and its per-dimension affine offsets give the
   index_map (offsets must step in whole blocks — halo views fall back to
   the jnp backend);
-* an inner block tagged ``mxu`` (stencil pass) or a flat contraction tile
-  lowers to ``jax.lax.dot_general`` with f32 accumulation;
-* fused epilogue statements (fusion pass) lower to elementwise jnp ops
-  applied when the final reduction step completes (``pl.when``).
+* a whole **fusion group** (fuse.py) executes inside a single
+  ``pallas_call`` as a tile-compute graph: elementwise *prologue* DAGs
+  transform the input tiles, the MXU contraction runs via
+  ``jax.lax.dot_general`` with f32 accumulation kept in a VMEM scratch
+  across reduction grid steps, and the *epilogue* DAG (bias/activation
+  chains, diamond joins — second elementwise inputs become extra
+  BlockSpecs) is applied when the final reduction step completes
+  (``pl.when``);
+* plain elementwise blocks lower to a map kernel (no scratch).
 
-Supported pattern: contractions whose tile compute is a (batched) matmul
-plus an optional elementwise epilogue.  Everything else falls back to the
-jnp backend — ``lower_op_pallas`` raises ``UnsupportedPallas``.
+``lower_program_pallas`` lowers every op block / fusion group of a
+program to one kernel each and composes them; any unsupported block
+raises ``UnsupportedPallas`` and the driver falls back to the jnp
+backend, recording the reason.
 """
 from __future__ import annotations
 
@@ -34,7 +42,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .ir import Block, Constant, Intrinsic, Load, Refinement, RefDir, Store
+from .ir import Block, Constant, Intrinsic, Load, Program, Refinement, RefDir, Store
 from .lower_jnp import _J_BINARY, _J_UNARY
 
 
@@ -72,18 +80,120 @@ def _grid_ref(ref: Refinement, grid_ranges: Mapping[str, int]) -> GridRef:
 
 
 @dataclasses.dataclass
+class _TNode:
+    """A node of the tile-compute graph (prologue/elementwise DAGs).
+
+    Deliberately mirrors ``lower_jnp._Node`` (same kinds, same intrinsic
+    tables) — the two walkers must stay in sync when intrinsics or DAG
+    shapes are added, but operate at different granularities (whole-tile
+    arrays here vs broadcast-materialized operands there)."""
+
+    kind: str  # 'load' | 'const' | 'op'
+    buf: str = ""
+    value: float = 0.0
+    op: str = ""
+    args: Tuple["_TNode", ...] = ()
+
+    def loads(self):
+        if self.kind == "load":
+            yield self
+        for a in self.args:
+            yield from a.loads()
+
+
+def _leaf_root(stmts) -> _TNode:
+    """Rebuild the expression DAG of a leaf statement list; returns the
+    node stored by the (single) Store."""
+    env: Dict[str, _TNode] = {}
+    root: Optional[_TNode] = None
+    for s in stmts:
+        if isinstance(s, Load):
+            env[s.into] = _TNode("load", buf=s.buf)
+        elif isinstance(s, Constant):
+            env[s.into] = _TNode("const", value=s.value)
+        elif isinstance(s, Intrinsic):
+            try:
+                args = tuple(env[a] for a in s.args)
+            except KeyError as e:
+                raise UnsupportedPallas(f"undefined scalar {e} in leaf")
+            env[s.into] = _TNode("op", op=s.op, args=args)
+        elif isinstance(s, Store):
+            root = env.get(s.scalar)
+        elif isinstance(s, Block):
+            raise UnsupportedPallas("nested block inside leaf")
+    if root is None:
+        raise UnsupportedPallas("leaf has no store")
+    return root
+
+
+def _split_contraction(root: _TNode, sig_of: Mapping[str, Tuple]) -> Tuple[_TNode, _TNode, float]:
+    """Split the stored DAG into (lhs, rhs, scale): top-level ``mul``
+    factors are grouped by the index pattern of their loads, so an
+    elementwise prologue (e.g. ``gelu(A[i,c]) * B[c,j]``) stays attached
+    to its operand side."""
+    factors: List[_TNode] = []
+    scale = 1.0
+    stack = [root]
+    while stack:
+        n = stack.pop(0)
+        if n.kind == "op" and n.op == "mul":
+            stack = list(n.args) + stack
+        elif n.kind == "const":
+            scale *= n.value
+        else:
+            factors.append(n)
+    groups: Dict[Tuple, List[_TNode]] = {}
+    order: List[Tuple] = []
+    for n in factors:
+        sigs = set()
+        for l in n.loads():
+            if l.buf not in sig_of:
+                raise UnsupportedPallas(f"leaf operand {l.buf} is not a grid input")
+            sigs.add(sig_of[l.buf])
+        if len(sigs) != 1:
+            raise UnsupportedPallas("mixed index patterns inside one operand")
+        sig = sigs.pop()
+        if sig not in groups:
+            groups[sig] = []
+            order.append(sig)
+        groups[sig].append(n)
+    if len(order) != 2:
+        raise UnsupportedPallas(f"{len(order)} distinct operand groups (need 2)")
+
+    def fold(ns: List[_TNode]) -> _TNode:
+        out = ns[0]
+        for n in ns[1:]:
+            out = _TNode("op", op="mul", args=(out, n))
+        return out
+
+    return fold(groups[order[0]]), fold(groups[order[1]]), scale
+
+
+@dataclasses.dataclass
 class ContractionPlan:
     grid_order: List[str]
     grid_sizes: Dict[str, int]
     in_refs: List[GridRef]
     out_ref: GridRef
     red_vars: List[str]
-    lhs: str
-    rhs: str
+    lhs: _TNode
+    rhs: _TNode
+    lhs_bufs: List[str]  # grid-input names feeding each side, in spec order
+    rhs_bufs: List[str]
+    scale: float
     lhs_contract: Tuple[int, ...]
     rhs_contract: Tuple[int, ...]
     epilogue: List[object]
     acc_scalar: Optional[str]
+
+
+@dataclasses.dataclass
+class ElementwisePlan:
+    grid_order: List[str]
+    grid_sizes: Dict[str, int]
+    in_refs: List[GridRef]
+    out_ref: GridRef
+    root: _TNode
 
 
 def _leaf_of(block: Block) -> Block:
@@ -97,7 +207,34 @@ def _leaf_of(block: Block) -> Block:
         cur = subs[0]
 
 
-def extract_contraction(outer: Block) -> ContractionPlan:
+def _check_no_constraints(block: Block) -> None:
+    for b in block.walk():
+        if b.constraints:
+            raise UnsupportedPallas(
+                f"constraints in block {b.name} (halo/overflow tiles)")
+
+
+def _ensure_grid(outer: Block) -> Block:
+    """Canonicalize a flat (``fits_inner``) or per-point fused block into
+    the grid->tile shape the emitter expects, by splitting its output
+    indices at full range (a 1-step grid per output dim)."""
+    if "grid" in outer.tags:
+        return outer
+    from .tiling import split_block
+
+    out_ref = next((r for r in outer.refs if r.dir in (RefDir.OUT, RefDir.INOUT)), None)
+    if out_ref is None:
+        raise UnsupportedPallas("no output ref")
+    free = outer.idx_ranges()
+    out_vars = [n for e in out_ref.offsets for n in e.names() if n in free]
+    tiles = {v: free[v] for v in out_vars}
+    if not tiles:
+        raise UnsupportedPallas("no output indices to grid over")
+    return split_block(outer, tiles, name_suffix="g", full_tiles=True)
+
+
+def _collect(outer: Block):
+    """Common scaffolding: grid refs, local allocs, leaf stmts, epilogue."""
     grid_ranges = {i.name: i.range for i in outer.idxs if not i.is_passthrough()}
     ins: List[GridRef] = []
     out: Optional[GridRef] = None
@@ -114,14 +251,8 @@ def extract_contraction(outer: Block) -> ContractionPlan:
     if out is None:
         raise UnsupportedPallas("no output ref")
 
-    out_vars = {v for v in out.dim_vars if v}
-    red_vars = [v for v in grid_ranges if v not in out_vars]
-    grid_order = [v for v in grid_ranges if v in out_vars] + red_vars
-
-    # ---- locate leaf compute + epilogue ------------------------------------
     sub_blocks = outer.sub_blocks()
     epilogue: List[object] = []
-    acc_scalar: Optional[str] = None
     if sub_blocks:
         for b in sub_blocks[0].walk():
             for r in b.refs:
@@ -131,7 +262,7 @@ def extract_contraction(outer: Block) -> ContractionPlan:
         # sub-block are the (pure elementwise) fused epilogue, which lifts
         # soundly from per-point to per-tile granularity.
         cur: Block = outer
-        leaf_stmts = []
+        leaf_stmts: List = []
         while True:
             msubs = cur.sub_blocks()
             trailing = []
@@ -153,30 +284,34 @@ def extract_contraction(outer: Block) -> ContractionPlan:
             cur = msubs[0]
     else:
         leaf_stmts = list(outer.stmts)
+    return grid_ranges, ins, out, local_alloc, leaf_stmts, epilogue
 
-    # ---- parse the leaf: two loads -> mul -> store(add) --------------------
-    loads: Dict[str, str] = {}
-    mul_args: Optional[Tuple[str, str]] = None
-    for s in leaf_stmts:
-        if isinstance(s, Load):
-            loads[s.into] = s.buf
-        elif isinstance(s, Intrinsic) and s.op == "mul" and len(s.args) == 2:
-            mul_args = (loads.get(s.args[0], ""), loads.get(s.args[1], ""))
-        elif isinstance(s, Intrinsic):
-            raise UnsupportedPallas(f"leaf intrinsic {s.op}")
-    if mul_args is None or not all(mul_args):
-        raise UnsupportedPallas("leaf is not a 2-operand contraction")
 
+def extract_contraction(outer: Block) -> ContractionPlan:
+    grid_ranges, ins, out, local_alloc, leaf_stmts, epilogue = _collect(outer)
+    out_vars = {v for v in out.dim_vars if v}
+    red_vars = [v for v in grid_ranges if v not in out_vars]
+    grid_order = [v for v in grid_ranges if v in out_vars] + red_vars
+
+    root = _leaf_root(leaf_stmts)
+    sig_of = {g.ref.into: (g.dim_vars, g.block_shape) for g in ins}
+    lhs, rhs, scale = _split_contraction(root, sig_of)
+
+    acc_scalar: Optional[str] = None
     for s in epilogue:
         if isinstance(s, Load) and s.buf in local_alloc:
             acc_scalar = s.into
 
-    grid_in_names = {g.ref.into for g in ins}
-    lhs_local, rhs_local = mul_args
-    if lhs_local not in grid_in_names or rhs_local not in grid_in_names:
-        raise UnsupportedPallas("leaf operands are not grid inputs")
-    lhs_gr = next(g for g in ins if g.ref.into == lhs_local)
-    rhs_gr = next(g for g in ins if g.ref.into == rhs_local)
+    def side_bufs(node: _TNode) -> List[str]:
+        seen: List[str] = []
+        for l in node.loads():
+            if l.buf not in seen:
+                seen.append(l.buf)
+        return seen
+
+    lhs_bufs, rhs_bufs = side_bufs(lhs), side_bufs(rhs)
+    lhs_gr = next(g for g in ins if g.ref.into == lhs_bufs[0])
+    rhs_gr = next(g for g in ins if g.ref.into == rhs_bufs[0])
 
     def contract_axes(gr: GridRef) -> List[int]:
         axes = []
@@ -191,25 +326,65 @@ def extract_contraction(outer: Block) -> ContractionPlan:
     lhs_final, rhs_final, used = [], [], set()
     for a in lhs_c:
         for b in rhs_c:
-            if b not in used and lhs_gr.block_shape[a] == rhs_gr.block_shape[b]:
-                lhs_final.append(a)
-                rhs_final.append(b)
-                used.add(b)
-                break
+            bv, av = rhs_gr.dim_vars[b], lhs_gr.dim_vars[a]
+            if b in used or lhs_gr.block_shape[a] != rhs_gr.block_shape[b]:
+                continue
+            if av is not None and bv is not None and av != bv:
+                continue  # distinct reduction vars never pair
+            lhs_final.append(a)
+            rhs_final.append(b)
+            used.add(b)
+            break
     if not lhs_final:
         raise UnsupportedPallas("no contraction dims found")
 
     return ContractionPlan(
         grid_order=grid_order, grid_sizes=grid_ranges, in_refs=ins, out_ref=out,
-        red_vars=red_vars, lhs=lhs_local, rhs=rhs_local,
-        lhs_contract=tuple(lhs_final), rhs_contract=tuple(rhs_final),
+        red_vars=red_vars, lhs=lhs, rhs=rhs, lhs_bufs=lhs_bufs, rhs_bufs=rhs_bufs,
+        scale=scale, lhs_contract=tuple(lhs_final), rhs_contract=tuple(rhs_final),
         epilogue=epilogue, acc_scalar=acc_scalar,
     )
+
+
+def extract_elementwise(outer: Block) -> ElementwisePlan:
+    grid_ranges, ins, out, _local, leaf_stmts, epilogue = _collect(outer)
+    if epilogue:
+        raise UnsupportedPallas("elementwise block with trailing epilogue")
+    root = _leaf_root(leaf_stmts)
+    # broadcast legality: each input's addressed dims must line up with the
+    # trailing dims of the output tile (numpy broadcasting in the kernel)
+    out_dv = list(out.dim_vars)
+    for g in ins:
+        dv = list(g.dim_vars)
+        tail = out_dv[len(out_dv) - len(dv):] if len(dv) <= len(out_dv) else None
+        if tail is None:
+            raise UnsupportedPallas(f"input {g.ref.into} has higher rank than output")
+        for d, v in enumerate(dv):
+            if v is None and g.block_shape[d] == 1:
+                continue
+            if v != tail[d] and g.block_shape[d] != 1:
+                raise UnsupportedPallas(
+                    f"input {g.ref.into} dim {d} does not broadcast against the output")
+    grid_order = [v for v in grid_ranges]
+    if any(v not in {d for d in out.dim_vars if d} for v in grid_order):
+        raise UnsupportedPallas("elementwise block with reduction index")
+    return ElementwisePlan(grid_order=grid_order, grid_sizes=grid_ranges,
+                           in_refs=ins, out_ref=out, root=root)
 
 
 # --------------------------------------------------------------------------
 # Kernel emission
 # --------------------------------------------------------------------------
+def _eval_tnode(n: _TNode, tiles: Mapping[str, jnp.ndarray], dtype=None):
+    if n.kind == "load":
+        return tiles[n.buf]
+    if n.kind == "const":
+        return jnp.asarray(n.value, dtype or jnp.float32)
+    args = [_eval_tnode(a, tiles, dtype) for a in n.args]
+    fn = _J_UNARY[n.op] if len(args) == 1 and n.op in _J_UNARY else _J_BINARY[n.op]
+    return fn(*args)
+
+
 def _apply_epilogue(plan: ContractionPlan, acc, tile_args: Dict[str, jnp.ndarray]):
     env: Dict[str, jnp.ndarray] = {}
     result = acc
@@ -227,15 +402,26 @@ def _apply_epilogue(plan: ContractionPlan, acc, tile_args: Dict[str, jnp.ndarray
     return result
 
 
-def lower_op_pallas(outer: Block, interpret: bool = False) -> Callable:
-    """Returns fn(arrays: dict) -> output array for one optimized op block."""
-    plan = extract_contraction(outer)
+def _dimension_semantics(grid_order: List[str], red_vars) -> Optional[object]:
+    """Mark parallel (output) grid axes for Mosaic; reduction axes are
+    'arbitrary' because the scratch accumulation carries state across
+    their steps."""
+    red = set(red_vars)
+    sem = tuple("arbitrary" if v in red else "parallel" for v in grid_order)
+    try:
+        return pltpu.TPUCompilerParams(dimension_semantics=sem)
+    except Exception:  # pragma: no cover - API drift across jax versions
+        return None
+
+
+def _emit_contraction(plan: ContractionPlan, interpret: bool) -> Callable:
     grid = tuple(plan.grid_sizes[v] for v in plan.grid_order)
     gpos = {v: i for i, v in enumerate(plan.grid_order)}
 
-    lhs_gr = next(g for g in plan.in_refs if g.ref.into == plan.lhs)
-    rhs_gr = next(g for g in plan.in_refs if g.ref.into == plan.rhs)
-    extra = [g for g in plan.in_refs if g.ref.into not in (plan.lhs, plan.rhs)]
+    side = set(plan.lhs_bufs) | set(plan.rhs_bufs)
+    operand_grs = [g for g in plan.in_refs if g.ref.into in side]
+    extra = [g for g in plan.in_refs if g.ref.into not in side]
+    order = operand_grs + extra
 
     def index_map_for(gr: GridRef):
         def imap(*gidx):
@@ -253,11 +439,14 @@ def lower_op_pallas(outer: Block, interpret: bool = False) -> Callable:
         else:
             *ins, out_ref = refs
             acc_ref = None
-        lhs = ins[0][...]
-        rhs = ins[1][...]
+        tiles = {g.ref.into: ins[i][...] for i, g in enumerate(order)}
+        lhs = _eval_tnode(plan.lhs, tiles)
+        rhs = _eval_tnode(plan.rhs, tiles)
         part = jax.lax.dot_general(lhs, rhs, dnums, preferred_element_type=jnp.float32)
         part = part.reshape(out_block)
-        tile_args = {g.ref.into: ins[2 + i][...] for i, g in enumerate(extra)}
+        if plan.scale != 1.0:
+            part = part * jnp.asarray(plan.scale, part.dtype)
+        tile_args = {g.ref.into: tiles[g.ref.into] for g in extra}
         if has_red:
             first = functools.reduce(
                 jnp.logical_and, [pl.program_id(gpos[v]) == 0 for v in plan.red_vars]
@@ -285,16 +474,18 @@ def lower_op_pallas(outer: Block, interpret: bool = False) -> Callable:
                 val = _apply_epilogue(plan, val, tile_args)
             out_ref[...] = val.astype(out_ref.dtype)
 
-    in_specs = [
-        pl.BlockSpec(lhs_gr.block_shape, index_map_for(lhs_gr)),
-        pl.BlockSpec(rhs_gr.block_shape, index_map_for(rhs_gr)),
-    ] + [pl.BlockSpec(g.block_shape, index_map_for(g)) for g in extra]
+    in_specs = [pl.BlockSpec(g.block_shape, index_map_for(g)) for g in order]
     out_spec = pl.BlockSpec(out_block, index_map_for(plan.out_ref))
     out_full_shape = tuple(
         s * (plan.grid_sizes[v] if v else 1)
         for s, v in zip(out_block, plan.out_ref.dim_vars)
     )
 
+    kwargs = {}
+    if not interpret:
+        cp = _dimension_semantics(plan.grid_order, plan.red_vars)
+        if cp is not None:
+            kwargs["compiler_params"] = cp
     call = pl.pallas_call(
         kernel,
         grid=grid,
@@ -303,12 +494,129 @@ def lower_op_pallas(outer: Block, interpret: bool = False) -> Callable:
         out_shape=jax.ShapeDtypeStruct(out_full_shape, out_dtype),
         scratch_shapes=[pltpu.VMEM(out_block, jnp.float32)] if has_red else [],
         interpret=interpret,
+        **kwargs,
     )
-
-    order = [lhs_gr, rhs_gr] + extra
 
     def fn(arrays: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
         args = [jnp.asarray(arrays[g.ref.from_buf]) for g in order]
         return call(*args)
 
+    fn.out_shape = out_full_shape
+    fn.out_dtype = out_dtype
+    fn.in_bufs = [g.ref.from_buf for g in order]
     return fn
+
+
+def _emit_elementwise(plan: ElementwisePlan, interpret: bool) -> Callable:
+    grid = tuple(plan.grid_sizes[v] for v in plan.grid_order)
+    gpos = {v: i for i, v in enumerate(plan.grid_order)}
+    out_block = plan.out_ref.block_shape
+    out_dtype = np.dtype(plan.out_ref.ref.dtype)
+
+    def index_map_for(gr: GridRef):
+        def imap(*gidx):
+            return tuple(gidx[gpos[v]] if v is not None else 0 for v in gr.dim_vars)
+        return imap
+
+    def kernel(*refs):
+        *ins, out_ref = refs
+        tiles = {g.ref.into: ins[i][...] for i, g in enumerate(plan.in_refs)}
+        val = _eval_tnode(plan.root, tiles, jnp.dtype(out_dtype))
+        out_ref[...] = jnp.broadcast_to(val, out_block).astype(out_ref.dtype)
+
+    kwargs = {}
+    if not interpret:
+        cp = _dimension_semantics(plan.grid_order, ())
+        if cp is not None:
+            kwargs["compiler_params"] = cp
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(g.block_shape, index_map_for(g)) for g in plan.in_refs],
+        out_specs=pl.BlockSpec(out_block, index_map_for(plan.out_ref)),
+        out_shape=jax.ShapeDtypeStruct(
+            tuple(s * (plan.grid_sizes[v] if v else 1)
+                  for s, v in zip(out_block, plan.out_ref.dim_vars)),
+            out_dtype,
+        ),
+        interpret=interpret,
+        **kwargs,
+    )
+
+    def fn(arrays: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        args = [jnp.asarray(arrays[g.ref.from_buf]) for g in plan.in_refs]
+        return call(*args)
+
+    fn.out_shape = tuple(s * (plan.grid_sizes[v] if v else 1)
+                         for s, v in zip(out_block, plan.out_ref.dim_vars))
+    fn.out_dtype = out_dtype
+    fn.in_bufs = [g.ref.from_buf for g in plan.in_refs]
+    return fn
+
+
+def lower_op_pallas(outer: Block, interpret: bool = False) -> Callable:
+    """Returns fn(arrays: dict) -> output array for one optimized op block
+    or fusion group (a single ``pallas_call``)."""
+    outer = _ensure_grid(outer)
+    _check_no_constraints(outer)
+    out_ref = next((r for r in outer.refs if r.dir in (RefDir.OUT, RefDir.INOUT)), None)
+    if out_ref is None:
+        raise UnsupportedPallas("no output ref")
+    agg = out_ref.agg or "assign"
+    if agg == "assign" and not outer.sub_blocks():
+        fn = _emit_elementwise(extract_elementwise(outer), interpret)
+    elif agg == "assign":
+        # a fused group's outer agg is on its local accumulator; decide by
+        # whether a reduction sub-structure exists
+        try:
+            fn = _emit_contraction(extract_contraction(outer), interpret)
+        except UnsupportedPallas as contraction_err:
+            try:
+                fn = _emit_elementwise(extract_elementwise(outer), interpret)
+            except UnsupportedPallas:
+                # the sub-block structure says "contraction"; its error is
+                # the one worth recording as the fallback reason
+                raise contraction_err
+    else:
+        fn = _emit_contraction(extract_contraction(outer), interpret)
+    fn.out_buf = out_ref.from_buf
+    return fn
+
+
+def lower_program_pallas(prog: Program, interpret: bool = False) -> Callable:
+    """Lower every op block / fusion group to one Pallas kernel and
+    compose them in program order; intermediates between groups live in
+    outer memory (HBM).  Raises ``UnsupportedPallas`` (whole-program jnp
+    fallback) when any block cannot lower."""
+    blocks = [s for s in prog.entry.stmts if isinstance(s, Block)]
+    if not blocks:
+        raise UnsupportedPallas("no op blocks")
+    kernels = []
+    written = set()
+    for b in blocks:
+        try:
+            fn = lower_op_pallas(b, interpret=interpret)
+        except UnsupportedPallas as e:
+            raise UnsupportedPallas(f"{b.name}: {e}")
+        decl = prog.buffers.get(fn.out_buf)
+        if decl is None or tuple(decl.shape) != tuple(fn.out_shape):
+            raise UnsupportedPallas(
+                f"{b.name}: kernel writes {fn.out_shape}, buffer is "
+                f"{tuple(decl.shape) if decl else None}")
+        if fn.out_buf in written:
+            raise UnsupportedPallas(f"{b.name}: {fn.out_buf} written twice")
+        written.add(fn.out_buf)
+        kernels.append(fn)
+    outs = list(prog.outputs)
+    missing = [o for o in outs if o not in written]
+    if missing:
+        raise UnsupportedPallas(f"outputs {missing} not produced by any kernel")
+
+    def run(arrays: Mapping[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        env: Dict[str, jnp.ndarray] = {k: jnp.asarray(v) for k, v in arrays.items()}
+        for fn in kernels:
+            env[fn.out_buf] = fn(env)
+        return {n: env[n] for n in outs}
+
+    run.n_kernels = len(kernels)
+    return run

@@ -26,7 +26,7 @@ from .frontend import TileProgram
 from .hwconfig import TPU_V5E, HardwareConfig
 from .ir import Block, Program
 from .lower_jnp import lower_program_jnp
-from .lower_pallas import UnsupportedPallas, lower_op_pallas
+from .lower_pallas import UnsupportedPallas, lower_program_pallas
 from .passes import compile_program
 
 _BACKEND = os.environ.get("REPRO_BACKEND", "jnp")
@@ -49,23 +49,20 @@ class CompiledOp:
         self.optimized = compile_program(prog, hw)
         self.backend = backend
         self.jnp_fn = lower_program_jnp(self.optimized.source)
-        self.pallas_fns: Dict[str, Callable] = {}
+        self.pallas_fn: Optional[Callable] = None
         self.pallas_ok = False
         if backend.startswith("pallas"):
             interpret = backend == "pallas_interpret"
-            blocks = [s for s in self.optimized.entry.stmts if isinstance(s, Block)]
             try:
-                if len(blocks) == 1:
-                    out_buf = self.optimized.outputs[0]
-                    self.pallas_fns[out_buf] = lower_op_pallas(blocks[0], interpret=interpret)
-                    self.pallas_ok = True
+                # one pallas_call per fusion group, composed in program order
+                self.pallas_fn = lower_program_pallas(self.optimized, interpret=interpret)
+                self.pallas_ok = True
             except UnsupportedPallas:
                 self.pallas_ok = False
 
     def __call__(self, arrays: Mapping[str, jnp.ndarray]):
         if self.pallas_ok:
-            out_buf = self.optimized.outputs[0]
-            return {out_buf: self.pallas_fns[out_buf](arrays)}
+            return self.pallas_fn(arrays)
         return self.jnp_fn(arrays)
 
 

@@ -39,7 +39,9 @@ def get_pass(name: str) -> PassFn:
 
 
 class TilingOracle:
-    """Record/replay store for autotile decisions, keyed by block name.
+    """Record/replay store for autotile decisions, keyed by block name +
+    content fingerprint (``autotile._oracle_key``) so a fused group's
+    tiling replays for exactly the group it was chosen for.
 
     Cold compile: every searched tiling is recorded into ``chosen``.
     Warm compile: construct with ``known`` (e.g. loaded from the on-disk
@@ -69,9 +71,13 @@ class PassManager:
         self.hw = hw
         self.oracle = oracle
         self.autotune_workers = autotune_workers
-        # (pass name, public params) in application order — JSON-able, so
-        # the driver can persist it as the compile's pass trace.
-        self.trace: List[Tuple[str, Dict]] = []
+        # (pass name, public params[, report]) in application order —
+        # JSON-able, so the driver can persist it as the compile's pass
+        # trace.  A pass can append structured decision records (e.g. the
+        # fusion pass's accepted/rejected merges) to the injected
+        # ``params["_report"]`` list; non-empty reports become the trace
+        # entry's third element.
+        self.trace: List[Tuple] = []
 
     def run(self, prog: Program) -> Program:
         import copy
@@ -87,8 +93,11 @@ class PassManager:
                     run_params["_oracle"] = self.oracle
                 if self.autotune_workers is not None and "workers" not in run_params:
                     run_params["workers"] = self.autotune_workers
+            report: List = []
+            run_params["_report"] = report
             prog = fn(prog, self.hw, run_params)
-            self.trace.append((name, dict(params)))
+            entry = (name, dict(params), report) if report else (name, dict(params))
+            self.trace.append(entry)
         prog.source = source
         return prog
 

@@ -190,6 +190,17 @@ def _coordinate_descent(block, hw, params, free, cands):
     return tiles, cost
 
 
+def _oracle_key(block: Block) -> str:
+    """Tiling-oracle key: the block name qualified by the block's content
+    fingerprint, so a recorded tiling replays for the *whole group* it was
+    chosen for — a fused group whose membership changed (different fusion
+    decisions on a warm compile of different source) never inherits a
+    stale tiling."""
+    from ..ir import ir_fingerprint
+
+    return f"{block.name}#{ir_fingerprint(block)[:16]}"
+
+
 @register("autotile")
 def autotile_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
     oracle = params.get("_oracle")
@@ -199,7 +210,8 @@ def autotile_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program
             new_stmts.append(s)
             continue
         free = {i.name: i.range for i in s.idxs if not i.is_passthrough()}
-        known = oracle.lookup(s.name) if oracle is not None else None
+        key = _oracle_key(s) if oracle is not None else s.name
+        known = oracle.lookup(key) if oracle is not None else None
         if known is not None:
             tiles = {v: t for v, t in known.items() if v in free}
             cost = evaluate_tiling(s, tiles, hw, params)
@@ -209,7 +221,7 @@ def autotile_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program
             if oracle is not None:
                 oracle.searches += 1
         if oracle is not None:
-            oracle.record(s.name, tiles)
+            oracle.record(key, tiles)
         if all(tiles.get(v, free[v]) >= free[v] for v in free) and cost.feasible:
             # whole op fits in one tile: keep flat, mark it
             s.add_tag("fits_inner")

@@ -4,11 +4,24 @@ parallel, and assign inner-memory addresses to tile views (arena style).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Set, Tuple
+from typing import Dict, Iterable, List, Mapping, Set, Tuple
 
 from ..hwconfig import HardwareConfig
 from ..ir import Block, Program, RefDir, dtype_bytes
 from . import register
+
+ARENA_ALIGN = 512  # bytes; every inner-memory view starts on this boundary
+
+
+def arena_bytes(sizes: Iterable[int]) -> int:
+    """Total arena bytes the address assigner would consume for views of
+    the given byte sizes (each allocation rounded up to ``ARENA_ALIGN``).
+    The fusion cost model uses this to price a candidate group's VMEM
+    pressure with exactly the allocator's arithmetic."""
+    addr = 0
+    for size in sizes:
+        addr += (int(size) + ARENA_ALIGN - 1) & ~(ARENA_ALIGN - 1)
+    return addr
 
 
 def dependency_dag(blocks: List[Block]) -> List[Set[int]]:
@@ -58,7 +71,7 @@ def schedule_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program
                         from ..ir import Location
 
                         r.location = Location(unit=r.location.unit, bank=r.location.bank, addr=addr)
-                        addr += (size + 511) & ~511  # 512B aligned
+                        addr += arena_bytes([size])
             if addr > 0:
                 g.add_tag(f"arena:{addr}")
     return prog

@@ -40,12 +40,19 @@ def _inner_min_span(expr: Affine, inner_ranges: Mapping[str, int]) -> Tuple[int,
     return mn, span
 
 
-def split_block(block: Block, tiles: Mapping[str, int], name_suffix: str = "t") -> Block:
+def split_block(block: Block, tiles: Mapping[str, int], name_suffix: str = "t",
+                full_tiles: bool = False) -> Block:
     """Split ``block`` by per-index tile sizes.  Indices absent from
     ``tiles`` (or with tile >= range) stay fully inner.  Returns the new
-    outer block containing the inner block."""
+    outer block containing the inner block.
+
+    With ``full_tiles=True`` an index whose tile equals its range still
+    becomes a (range-1) grid dimension instead of staying inner — the
+    canonical grid shape the Pallas backend expects even when the whole
+    op fits one tile."""
     free = {i.name: i.range for i in block.idxs if not i.is_passthrough()}
-    tiled = {v: t for v, t in tiles.items() if v in free and t < free[v]}
+    limit = (lambda t, r: t <= r) if full_tiles else (lambda t, r: t < r)
+    tiled = {v: t for v, t in tiles.items() if v in free and limit(t, free[v])}
 
     # substitution on original index names
     subst = {v: Affine.var(v, t) + Affine.var(f"{v}_{name_suffix}") for v, t in tiled.items()}

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from . import adamw
+from ..parallel.compat import axis_size
 
 
 def _flat_size(x: jnp.ndarray) -> int:
@@ -31,7 +32,7 @@ def zero1_update(params: Any, grads: Any, state: Dict[str, Any],
                  cfg: adamw.AdamWConfig, axis: str = "data") -> Tuple[Any, Dict[str, Any], Dict]:
     """Per-shard update — call inside shard_map with params/grads replicated
     on ``axis`` and opt state sharded (leading dim = shard)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     idx = jax.lax.axis_index(axis)
 
     def rs(g):

@@ -16,6 +16,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from .compat import axis_size
 
 
 def ring_allgather_matmul(x_shard: jnp.ndarray, w: jnp.ndarray,
@@ -29,7 +30,7 @@ def ring_allgather_matmul(x_shard: jnp.ndarray, w: jnp.ndarray,
     travel a ring; at each step the chunk in hand is multiplied while the
     next one is in flight (overlapping (N-1)/N of the gather).
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     m_loc, k = x_shard.shape
     perm = [(i, (i + 1) % n) for i in range(n)]
@@ -61,7 +62,7 @@ def ring_matmul_reduce_scatter(x_shard: jnp.ndarray, w_shard: jnp.ndarray,
     ``(q + n-1 - s) mod n`` — one (M,K/N)x(K/N,F/N) matmul overlaps each
     permute.
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     f = w_shard.shape[1]
     assert f % n == 0

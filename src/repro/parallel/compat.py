@@ -1,0 +1,17 @@
+"""Small jax-version compatibility shims for the parallel/optim layers."""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(name: str) -> int:
+    """Static size of the named mesh axis inside shard_map/pmap.
+
+    ``jax.lax.axis_size`` only exists in newer jax releases; on older
+    ones (e.g. 0.4.x) ``jax.core.axis_frame(name)`` resolves the bound
+    axis and returns its (static) size."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    frame = jax.core.axis_frame(name)
+    return int(getattr(frame, "size", frame))

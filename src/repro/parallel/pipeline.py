@@ -18,6 +18,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+from .compat import axis_size
 
 
 def pipeline_apply(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
@@ -29,7 +30,7 @@ def pipeline_apply(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
     stage 0 (others receive via permute).  Returns (M, mb, ...) outputs,
     meaningful on the last stage.
     """
-    s = jax.lax.axis_size(axis)
+    s = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     m = micro_in.shape[0]
     total = m + s - 1

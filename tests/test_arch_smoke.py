@@ -45,8 +45,21 @@ def test_forward_shapes(name):
 
 @pytest.mark.parametrize("name", ARCHS)
 def test_prefill_then_decode_matches_full_forward(name):
-    """Prefill s tokens then decode one more == forward over s+1 tokens."""
+    """Prefill s tokens then decode one more == forward over s+1 tokens.
+
+    MoE capacity-bounded routing legitimately breaks this identity when
+    tokens overflow: the per-expert capacity depends on the total token
+    count, so prefill(s)+decode(1) and prefill(s+1) drop *different*
+    tokens.  The comparison is only well-defined in the no-drop regime,
+    so MoE configs run with capacity_factor = n_experts (capacity >= all
+    assignments; routing itself is still exercised)."""
+    import dataclasses
+
     cfg = configs.get(name).scaled()
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=float(cfg.moe.n_experts)))
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
     b, s = 2, 12

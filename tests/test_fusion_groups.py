@@ -1,0 +1,264 @@
+"""Fusion-group tests: whole-chain single-kernel Pallas lowering,
+cost-arbitrated (VMEM-pressure-aware) group formation with an auditable
+decision trace, and property-style equivalence of fused lowering with the
+reference interpreter on randomized elementwise-chain + contraction
+programs (both jnp and interpret-mode Pallas backends)."""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TileProgram, execute_reference, stripe_jit
+from repro.core.hwconfig import HardwareConfig, MemoryUnit, TPU_V5E
+from repro.core.passes import get_pass
+
+
+def _chain_prog(with_second_mm=False, m=16, k=12, n=24, n2=8):
+    tp = TileProgram("chain")
+    tp.input("A", (m, k))
+    tp.input("B", (k, n))
+    tp.input("b", (n,))
+    tp.temp("T", (m, n))
+    tp.temp("U", (m, n))
+    if with_second_mm:
+        tp.input("W2", (n, n2))
+        tp.temp("G", (m, n))
+        tp.output("O", (m, n2))
+    else:
+        tp.output("G", (m, n))
+    tp.op("T[i, j] += A[i, c] * B[c, j]", name="mm1")
+    tp.op("U[i, j] = T[i, j] + b[j]", name="bias")
+    tp.op("G[i, j] = gelu(U[i, j])", name="act")
+    if with_second_mm:
+        tp.op("O[i, k2] += G[i, j] * W2[j, k2]", name="mm2")
+    return tp.build()
+
+
+def _rand_inputs(prog, seed=0):
+    rng = np.random.RandomState(seed)
+    return {n: rng.randn(*prog.buffers[n].shape).astype(np.float32)
+            for n in prog.inputs}
+
+
+# ------------------------------------------------------- single-kernel chain
+def test_chain_lowered_as_single_pallas_kernel():
+    """matmul->bias->gelu compiles to ONE pallas_call with zero
+    materialized intermediates (the acceptance bar from §2.3)."""
+    prog = _chain_prog()
+    src = copy.deepcopy(prog)
+    compiled = stripe_jit(prog, TPU_V5E, backend="pallas", interpret=True)
+    assert compiled.record.backend == "pallas", compiled.record.fallback_reason
+    assert compiled.record.n_kernels == 1
+    assert compiled.record.groups == [["mm1", "bias", "act"]]
+    # intermediates scalarized away: not in the optimized program's buffers
+    assert "T" not in compiled.program.buffers
+    assert "U" not in compiled.program.buffers
+    ins = _rand_inputs(src)
+    got = compiled(ins)["G"]
+    want = execute_reference(src, ins)["G"]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+def test_two_anchor_chain_lowers_one_kernel_per_group():
+    prog = _chain_prog(with_second_mm=True)
+    src = copy.deepcopy(prog)
+    compiled = stripe_jit(prog, TPU_V5E, backend="pallas", interpret=True)
+    assert compiled.record.backend == "pallas", compiled.record.fallback_reason
+    assert compiled.record.n_kernels == 2  # [mm1+bias+act], [mm2]
+    ins = _rand_inputs(src, 1)
+    got = compiled(ins)["O"]
+    want = execute_reference(src, ins)["O"]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+def test_diamond_multi_consumer_single_kernel():
+    """A multi-consumer broadcast (relu/sigmoid arms rejoining) is
+    absorbed atomically into the contraction anchor."""
+    tp = TileProgram("diamond")
+    tp.input("A", (8, 6))
+    tp.input("B", (6, 16))
+    tp.temp("T", (8, 16))
+    tp.temp("U", (8, 16))
+    tp.temp("V", (8, 16))
+    tp.output("O", (8, 16))
+    tp.op("T[i, j] += A[i, c] * B[c, j]", name="mm")
+    tp.op("U[i, j] = relu(T[i, j])", name="r")
+    tp.op("V[i, j] = sigmoid(T[i, j])", name="s")
+    tp.op("O[i, j] = U[i, j] * V[i, j]", name="join")
+    prog = tp.build()
+    src = copy.deepcopy(prog)
+    compiled = stripe_jit(prog, TPU_V5E, backend="pallas", interpret=True)
+    assert compiled.record.backend == "pallas", compiled.record.fallback_reason
+    assert compiled.record.n_kernels == 1
+    for buf in ("T", "U", "V"):
+        assert buf not in compiled.program.buffers
+    ins = _rand_inputs(src, 2)
+    np.testing.assert_allclose(
+        np.asarray(compiled(ins)["O"]), execute_reference(src, ins)["O"],
+        rtol=1e-4, atol=1e-5)
+
+
+def test_prologue_inlined_into_contraction():
+    """An elementwise producer feeding only a contraction is inlined as a
+    prologue (input transformed tile-by-tile inside the kernel)."""
+    tp = TileProgram("pro")
+    tp.input("X", (8, 12))
+    tp.input("W", (12, 16))
+    tp.temp("X2", (8, 12))
+    tp.output("O", (8, 16))
+    tp.op("X2[i, c] = gelu(X[i, c])", name="pre")
+    tp.op("O[i, j] += X2[i, c] * W[c, j]", name="mm")
+    prog = tp.build()
+    src = copy.deepcopy(prog)
+    compiled = stripe_jit(prog, TPU_V5E, backend="pallas", interpret=True)
+    assert compiled.record.backend == "pallas", compiled.record.fallback_reason
+    assert compiled.record.n_kernels == 1
+    assert compiled.record.groups == [["pre", "mm"]]
+    assert "X2" not in compiled.program.buffers
+    decisions = compiled.record.fusion_decisions()
+    assert any(d["kind"] == "prologue" and d["accepted"] for d in decisions)
+    ins = _rand_inputs(src, 3)
+    np.testing.assert_allclose(
+        np.asarray(compiled(ins)["O"]), execute_reference(src, ins)["O"],
+        rtol=1e-4, atol=1e-5)
+
+
+def test_permuted_consumer_not_fused_and_stays_correct():
+    """A consumer reading the intermediate with permuted indices
+    (U = relu(T^T)) must NOT join the group — the Pallas emitter stores
+    the accumulator tile interior unpermuted — and both backends must
+    still produce the transposed-correct result via the unfused path."""
+    tp = TileProgram("perm")
+    tp.input("A", (16, 8))
+    tp.input("B", (8, 16))
+    tp.temp("T", (16, 16))
+    tp.output("U", (16, 16))
+    tp.op("T[i, j] += A[i, c] * B[c, j]", name="mm")
+    tp.op("U[i, j] = relu(T[j, i])", name="tr")
+    prog = tp.build()
+    src = copy.deepcopy(prog)
+    want = execute_reference(src, _rand_inputs(src, 7))
+    ins = _rand_inputs(src, 7)
+    for backend in ("jnp", "pallas"):
+        compiled = stripe_jit(copy.deepcopy(src), TPU_V5E, backend=backend,
+                              interpret=True, use_disk=False)
+        assert compiled.record.groups == [["mm"], ["tr"]]
+        np.testing.assert_allclose(
+            np.asarray(compiled(ins)["U"]), want["U"], rtol=1e-4, atol=1e-5)
+        decisions = compiled.record.fusion_decisions()
+        assert any("permutes the group axes" in d["reason"] for d in decisions)
+
+
+# ------------------------------------------------------- cost arbitration
+TINY_VMEM = HardwareConfig(
+    name="tiny_vmem",
+    mem_units=(
+        MemoryUnit("HBM", 1 << 30, 100e9, cache_line_elems=128),
+        MemoryUnit("VMEM", 384 * 1024, 1e12, cache_line_elems=128),
+    ),
+    peak_flops=1e12,
+    passes=(("fuse", {"mem_cap_frac": 0.5, "canonical_tile": 64}),),
+)
+
+
+def _pressure_prog():
+    tp = TileProgram("pressure")
+    tp.input("A", (128, 128))
+    tp.input("B", (128, 128))
+    tp.input("E", (128, 128))
+    tp.input("F", (128, 128))
+    tp.temp("T", (128, 128))
+    tp.temp("U", (128, 128))
+    tp.output("O", (128, 128))
+    tp.op("T[i, j] += A[i, c] * B[c, j]", name="mm")
+    tp.op("U[i, j] = relu(T[i, j])", name="r")
+    tp.op("O[i, j] = U[i, j] + E[i, j] * F[i, j]", name="wide")
+    return tp.build()
+
+
+def test_vmem_pressure_rejects_unprofitable_merge():
+    """Group formation is cost-arbitrated: the cheap relu merge is
+    accepted, but the member dragging two extra full-tile inputs blows
+    the VMEM arena budget and is rejected — and both decisions land in
+    the pass report."""
+    prog = _pressure_prog()
+    src = copy.deepcopy(prog)
+    report = []
+    fused = get_pass("fuse")(prog, TINY_VMEM,
+                             {"mem_cap_frac": 0.5, "canonical_tile": 64,
+                              "_report": report})
+    blocks = [s for s in fused.entry.stmts if hasattr(s, "tags")]
+    assert len(blocks) == 2  # fused(mm+r) stays separate from `wide`
+    assert any("fused" in b.tags for b in blocks)
+    by_member = {d["member"]: d for d in report}
+    assert by_member["r"]["accepted"] is True
+    wide = by_member["wide"]
+    assert wide["accepted"] is False
+    assert "arena" in wide["reason"]
+    assert wide["vmem_bytes"] > wide["vmem_cap"]
+    # semantics unchanged by the partial fusion
+    ins = _rand_inputs(src, 4)
+    ra = execute_reference(src, ins)["O"]
+    rb = execute_reference(fused, ins)["O"]
+    np.testing.assert_allclose(ra, rb, rtol=1e-5)
+
+
+def test_fusion_decisions_recorded_in_stripe_jit_trace():
+    prog = _chain_prog()
+    compiled = stripe_jit(prog, TPU_V5E, backend="jnp")
+    decisions = compiled.record.fusion_decisions()
+    assert decisions, "fuse pass must report its merge decisions"
+    accepted = [d for d in decisions if d["accepted"]]
+    assert {d["member"] for d in accepted} >= {"bias", "act"}
+    for d in decisions:
+        assert {"group", "member", "kind", "accepted", "reason"} <= set(d)
+
+
+# ------------------------------------------------------- property testing
+_UNARY_OPS = ["relu", "tanh", "sigmoid", "gelu", "exp", "abs"]
+
+
+def _rand_chain_prog(m, k, n, ops, with_bias):
+    tp = TileProgram("p")
+    tp.input("A", (m, k))
+    tp.input("B", (k, n))
+    if with_bias:
+        tp.input("b", (n,))
+    tp.temp("T0", (m, n))
+    tp.op("T0[i, j] += A[i, c] * B[c, j]", name="anchor")
+    cur = "T0"
+    for idx, op in enumerate(ops):
+        nxt = f"T{idx + 1}"
+        expr = f"{op}({cur}[i, j])"
+        if idx == 0 and with_bias:
+            expr = f"{op}({cur}[i, j] + b[j])"
+        if idx == len(ops) - 1:
+            tp.output("Y", (m, n))
+            tp.op(f"Y[i, j] = {expr}", name=f"e{idx}")
+        else:
+            tp.temp(nxt, (m, n))
+            tp.op(f"{nxt}[i, j] = {expr}", name=f"e{idx}")
+            cur = nxt
+    return tp.build()
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(2, 6), st.integers(2, 5), st.integers(2, 6),
+    st.integers(1, 3), st.integers(0, len(_UNARY_OPS) - 1), st.integers(0, 1),
+)
+def test_property_fused_chain_matches_reference(m, k, n, chain_len, op0, bias):
+    ops = [_UNARY_OPS[(op0 + i) % len(_UNARY_OPS)] for i in range(chain_len)]
+    prog = _rand_chain_prog(m, k, n, ops, bool(bias))
+    src = copy.deepcopy(prog)
+    ins = _rand_inputs(src, seed=m * 1000 + k * 100 + n * 10 + chain_len)
+    want = execute_reference(src, ins)["Y"]
+    for backend in ("jnp", "pallas"):
+        compiled = stripe_jit(copy.deepcopy(src), TPU_V5E, backend=backend,
+                              interpret=True, use_disk=False)
+        if backend == "pallas":
+            assert compiled.record.backend == "pallas", compiled.record.fallback_reason
+            assert compiled.record.n_kernels == 1
+        got = np.asarray(compiled(ins)["Y"])
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-4)
