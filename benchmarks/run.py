@@ -69,7 +69,7 @@ def bench_fig1_engineering_effort() -> None:
 def bench_fig4_autotile() -> None:
     from repro.core.cost import evaluate_tiling
     from repro.core.frontend import single_op_program
-    from repro.core.hwconfig import PAPER_FIG4
+    from repro.core.hwconfig import get_config
     from repro.core.passes.autotile import choose_tiling
 
     prog = single_op_program(
@@ -79,10 +79,11 @@ def bench_fig4_autotile() -> None:
         out="O",
     )
     blk = prog.entry.stmts[0]
-    params = dict(PAPER_FIG4.passes[0][1])
-    ref = evaluate_tiling(blk, {"x": 3, "y": 4}, PAPER_FIG4, params)
+    hw = get_config("paper_fig4")
+    params = dict(hw.passes[0][1])
+    ref = evaluate_tiling(blk, {"x": 3, "y": 4}, hw, params)
     t0 = time.perf_counter()
-    tiles, best = choose_tiling(blk, PAPER_FIG4, params)
+    tiles, best = choose_tiling(blk, hw, params)
     dt = (time.perf_counter() - t0) * 1e6
     emit("fig4_cost_fig5b_tiling", 0.0, f"{ref.cost:.6f}")
     emit("fig4_lines_per_tilepair", 0.0, f"{ref.lines / ref.n_tiles:.0f}")
@@ -95,7 +96,7 @@ def bench_fig5_rewrite() -> None:
     import copy
 
     from repro.core import execute_reference, single_op_program
-    from repro.core.hwconfig import CPU_TEST
+    from repro.core.hwconfig import get_config
     from repro.core.lower_jnp import lower_program_jnp
     from repro.core.passes import compile_program
 
@@ -107,7 +108,7 @@ def bench_fig5_rewrite() -> None:
     )
     src = copy.deepcopy(prog)
     t0 = time.perf_counter()
-    opt = compile_program(prog, CPU_TEST)
+    opt = compile_program(prog, get_config("cpu_test"))
     dt_compile = (time.perf_counter() - t0) * 1e6
     rng = np.random.RandomState(0)
     arrays = {"I": rng.randn(12, 16, 8).astype(np.float32),
@@ -128,7 +129,7 @@ def bench_stripe_jit_cache() -> None:
     import tempfile
 
     from repro.core import CompilationCache, single_op_program, stripe_jit
-    from repro.core.hwconfig import CPU_TEST
+    from repro.core.hwconfig import get_config
 
     def conv():
         return single_op_program(
@@ -141,15 +142,15 @@ def bench_stripe_jit_cache() -> None:
     with tempfile.TemporaryDirectory() as d:
         cache = CompilationCache(disk_dir=d)
         t0 = time.perf_counter()
-        stripe_jit(conv(), CPU_TEST, cache=cache)
+        stripe_jit(conv(), get_config("cpu_test"), cache=cache)
         cold = time.perf_counter() - t0
         t0 = time.perf_counter()
-        stripe_jit(conv(), CPU_TEST, cache=cache)
+        stripe_jit(conv(), get_config("cpu_test"), cache=cache)
         warm_mem = time.perf_counter() - t0
         # fresh cache instance over the same disk dir = a new process
         cache2 = CompilationCache(disk_dir=d)
         t0 = time.perf_counter()
-        cp = stripe_jit(conv(), CPU_TEST, cache=cache2)
+        cp = stripe_jit(conv(), get_config("cpu_test"), cache=cache2)
         warm_disk = time.perf_counter() - t0
         assert cp.record.disk_hit
     emit("stripe_jit_compile_cold", cold * 1e6, 1)
@@ -193,7 +194,7 @@ def _fusion_measure(prog):
     import copy
 
     from repro.core import stripe_jit
-    from repro.core.hwconfig import TPU_V5E
+    from repro.core.hwconfig import get_config
     from repro.core.lower_jnp import lower_program_jnp
 
     semantic = copy.deepcopy(prog)
@@ -202,7 +203,7 @@ def _fusion_measure(prog):
     # library path (the default epilogue grouping is the right shape for
     # the Pallas/TPU backend, which applies epilogues on the accumulator
     # tile).
-    hw_cpu = TPU_V5E.with_params(**{"fuse.prefer": "prologue"})
+    hw_cpu = get_config("tpu_v5e").with_params(**{"fuse.prefer": "prologue"})
     compiled = stripe_jit(copy.deepcopy(prog), hw_cpu, backend="jnp")
     unfused_fn = lower_program_jnp(semantic, groups=None, jit_scope="op")
     fused_fn = lower_program_jnp(semantic, groups=compiled.record.groups,
@@ -247,7 +248,7 @@ def bench_fusion() -> None:
     import copy
 
     from repro.core import stripe_jit
-    from repro.core.hwconfig import TPU_V5E
+    from repro.core.hwconfig import get_config
 
     gelu_prog = _fusion_chain_prog(["gelu"])
     semantic = copy.deepcopy(gelu_prog)
@@ -262,7 +263,7 @@ def bench_fusion() -> None:
     emit("fusion_relu2_fused_groups", t_f2, n_f2)
     emit("fusion_speedup", 0.0, f"{t_u2 / t_f2:.2f}x")
 
-    pallas = stripe_jit(semantic, TPU_V5E, backend="pallas", interpret=True)
+    pallas = stripe_jit(semantic, get_config("tpu_v5e"), backend="pallas", interpret=True)
     emit("fusion_pallas_kernels", 0.0,
          f"\"{n_u}->{pallas.record.n_kernels} "
          f"(backend={pallas.record.backend})\"")
@@ -320,12 +321,34 @@ def bench_arch_steps() -> None:
 
 
 def bench_hillclimb() -> None:
-    try:
-        from . import stripe_hillclimb  # python -m benchmarks.run
-    except ImportError:
-        import stripe_hillclimb  # python benchmarks/run.py
+    # the narrative lives in the explore subsystem now (one search impl)
+    from repro.explore.hillclimb import roofline_hillclimb
 
-    stripe_hillclimb.main(emit=emit)
+    roofline_hillclimb(emit=emit)
+
+
+def bench_explore() -> None:
+    """Design-space exploration smoke: a tiny cost-model-only grid (<= 8
+    points) over the TPU sweep on the quick corpus — asserts the sweep
+    completes, dedupes the stock point against the baseline, and that at
+    least one swept config beats stock predicted latency somewhere."""
+    import tempfile
+
+    from repro.explore import dominating_baseline, get_space, pareto_front, run_sweep
+
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        sweep = run_sweep(get_space("tpu-sweep"), "quick", budget=8,
+                          strategy="grid", cache_dir=d, measure_top_k=0)
+        dt = (time.perf_counter() - t0) * 1e6
+    n_dedup = sum(1 for p in sweep.points if p.dedup_of is not None)
+    n_dominating = sum(1 for v in dominating_baseline(sweep).values() if v)
+    emit("explore_sweep_8pt", dt, f"\"points={len(sweep.points)} dedup={n_dedup}\"")
+    emit("explore_pareto_size", 0.0, len(pareto_front(sweep.points)))
+    emit("explore_workloads_dominating_baseline", 0.0, n_dominating)
+    best = min(sweep.unique_points(), key=lambda p: p.latency_s)
+    emit("explore_best_vs_baseline_predicted", 0.0,
+         f"{sweep.baseline.latency_s / max(best.latency_s, 1e-30):.2f}x")
 
 
 BENCHES = {
@@ -334,6 +357,7 @@ BENCHES = {
     "fig5": bench_fig5_rewrite,
     "cache": bench_stripe_jit_cache,
     "fusion": bench_fusion,
+    "explore": bench_explore,
     "matmul": bench_stripe_matmul,
     "flash": bench_flash_attention_blocks,
     "hillclimb": bench_hillclimb,

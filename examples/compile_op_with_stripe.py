@@ -8,7 +8,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import single_op_program
-from repro.core.hwconfig import PAPER_FIG4, TPU_V5E
+from repro.core.hwconfig import get_config
 from repro.core.passes import get_pass
 from repro.core.tiling import split_block
 
@@ -39,8 +39,9 @@ def pass_by_pass():
          "O": ((512, 512), "float32")},
         out="O",
     )
-    for name, params in TPU_V5E.passes:
-        prog = get_pass(name)(prog, TPU_V5E, params)
+    hw = get_config("tpu_v5e")
+    for name, params in hw.passes:
+        prog = get_pass(name)(prog, hw, params)
         blocks = [s for s in prog.entry.stmts if hasattr(s, "tags")]
         tags = [sorted(t for t in b.tags if not t.startswith("sched")) for b in blocks]
         print(f"after {name:10s}: {len(blocks)} block(s), tags={tags}")
@@ -68,7 +69,6 @@ def jit_with_cache():
     import time
 
     from repro.core import CompilationCache, stripe_jit
-    from repro.core.hwconfig import CPU_TEST
 
     print("=" * 70)
     print("stripe_jit: compile driver + persistent compilation cache")
@@ -77,10 +77,10 @@ def jit_with_cache():
     tensors = {"I": ((12, 16, 8), "float32"), "F": ((3, 3, 8, 16), "float32"),
                "O": ((12, 16, 16), "float32")}
     t0 = time.perf_counter()
-    compiled = stripe_jit(text, CPU_TEST, tensors=tensors, out="O", cache=cache)
+    compiled = stripe_jit(text, get_config("cpu_test"), tensors=tensors, out="O", cache=cache)
     cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    stripe_jit(text, CPU_TEST, tensors=tensors, out="O", cache=cache)
+    stripe_jit(text, get_config("cpu_test"), tensors=tensors, out="O", cache=cache)
     warm = time.perf_counter() - t0
     rng = np.random.RandomState(0)
     out = compiled({"I": rng.randn(12, 16, 8).astype(np.float32),

@@ -8,7 +8,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import TileProgram, execute_reference, validate_program
-from repro.core.hwconfig import TPU_V5E
+from repro.core.hwconfig import get_config
 from repro.core.lower_jnp import lower_program_jnp
 from repro.core.passes import compile_program
 
@@ -28,7 +28,7 @@ def main():
 
     # 2. Compile with the TPU v5e hardware config: fuse -> autotile ->
     #    stencil -> boundary -> localize -> schedule.
-    optimized = compile_program(prog, TPU_V5E)
+    optimized = compile_program(prog, get_config("tpu_v5e"))
     print("=== optimized Stripe IR ===")
     print(optimized.pretty())
 

@@ -160,14 +160,25 @@ def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, 
     model = params.get("cost", "cache_lines")
     if model == "cache_lines":
         lines = 0
+        bytes_hbm = 0.0
         for r, shape, uses_tiled, aligned in views:
             if not count_untiled and not uses_tiled:
                 continue
-            lines += lines_for_view(shape, r, line, aligned)
+            n = lines_for_view(shape, r, line, aligned)
+            lines += n
+            bytes_hbm += n * line * dtype_bytes(r.dtype)
         total_lines = n_tiles * lines
         cost = total_lines / max(macs, 1)
-        return TileCost(cost=cost, lines=total_lines, macs=macs, mem_elems=mem_elems,
-                        mem_bytes=mem_bytes, n_tiles=n_tiles, feasible=feasible, why=why)
+        # seconds-uniform terms so every TileCost converts to a predicted
+        # latency (the explore sweeps score cache-line configs too): line
+        # transactions priced at outer-memory bandwidth, MACs at peak.
+        total_bytes = n_tiles * bytes_hbm
+        t_mem = total_bytes / hw.mem_units[0].bandwidth
+        t_compute = 2.0 * macs / hw.peak_flops if hw.peak_flops > 0 else 0.0
+        return TileCost(cost=cost, lines=total_lines, macs=macs,
+                        bytes_hbm=total_bytes, t_mem=t_mem, t_compute=t_compute,
+                        mem_elems=mem_elems, mem_bytes=mem_bytes, n_tiles=n_tiles,
+                        feasible=feasible, why=why)
 
     # ---- roofline model ----------------------------------------------------
     # HBM traffic with *consecutive* reuse, matching the Pallas emission:
@@ -309,6 +320,65 @@ def fusion_vmem_pressure(refs, ranges: Mapping[str, int], hw: HardwareConfig,
     pressure = 2 * arena_bytes(sizes)
     cap = int(hw.inner_mem().size_bytes * params.get("mem_cap_frac", 0.45))
     return pressure, cap, pressure <= cap
+
+
+# --------------------------------------------------------------------------
+# Whole-program analytic scoring (design-space exploration, repro.explore)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ProgramScore:
+    """Analytic score of one compiled program on one hardware config —
+    the three Pareto axes the explore subsystem reports (predicted
+    latency, VMEM arena pressure, kernels launched) plus the roofline
+    ingredients they came from.
+
+    Built from the JSON pass trace (``score_pass_trace``), so a program
+    can be scored from a disk-cache payload without recompiling — the
+    sweep runner's fingerprint dedupe path."""
+
+    latency_s: float = 0.0       # sum over blocks of max(t_mem, t_compute)
+    bytes_hbm: float = 0.0
+    flops: float = 0.0
+    vmem_peak_bytes: int = 0     # largest scheduled arena across grid blocks
+    n_kernels: int = 0           # fusion groups = dispatch units
+    n_blocks: int = 0
+    per_block: List[Dict] = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def score_pass_trace(trace, n_kernels: int = 0) -> ProgramScore:
+    """Aggregate a ``PassManager`` trace (or its JSON round-trip from the
+    disk cache) into a :class:`ProgramScore`.
+
+    The autotile pass reports each block's chosen tiling with its
+    roofline terms; the schedule pass reports per-grid-block arena bytes.
+    Latency is the sum of per-block dominant roofline terms — blocks run
+    back-to-back, which matches the per-group dispatch model."""
+    score = ProgramScore(n_kernels=n_kernels)
+    for entry in trace or ():
+        name = entry[0]
+        report = entry[2] if len(entry) > 2 else []
+        if name == "autotile":
+            for rec in report:
+                if not isinstance(rec, dict) or "t_mem" not in rec:
+                    continue
+                score.latency_s += max(rec.get("t_mem", 0.0), rec.get("t_compute", 0.0))
+                score.bytes_hbm += rec.get("bytes_hbm", 0.0)
+                score.flops += 2.0 * rec.get("macs", 0.0)
+                # tile footprint is the pressure floor even when no arena
+                # is scheduled (single-tile "fits_inner" blocks)
+                score.vmem_peak_bytes = max(score.vmem_peak_bytes,
+                                            int(rec.get("mem_bytes", 0)))
+                score.n_blocks += 1
+                score.per_block.append(dict(rec))
+        elif name == "schedule":
+            for rec in report:
+                if isinstance(rec, dict) and "arena_bytes" in rec:
+                    score.vmem_peak_bytes = max(score.vmem_peak_bytes,
+                                                int(rec["arena_bytes"]))
+    return score
 
 
 def _classify_mnk(block: Block, eff: Mapping[str, int]):

@@ -134,13 +134,21 @@ def _semantic_groups(opt: Program) -> Optional[List[List[str]]]:
     return groups
 
 
+def _program_groups(opt: Program) -> List[List[str]]:
+    """Fusion groups (semantic-op name lists) of an optimized program,
+    falling back to one group per semantic op when the mapping is not
+    exact — the dispatch-unit count without any backend lowering."""
+    semantic = opt.source or opt
+    return _semantic_groups(opt) or [
+        [s.name] for s in semantic.entry.stmts if isinstance(s, Block)]
+
+
 def _lower(opt: Program, backend: str, interpret: bool, jit: bool
            ) -> Tuple[Callable, str, str, int, List[List[str]]]:
     """Returns (fn(arrays)->outputs dict, backend used, fallback reason,
     kernels launched per call, fusion groups)."""
     semantic = opt.source or opt
-    groups = _semantic_groups(opt) or [
-        [s.name] for s in semantic.entry.stmts if isinstance(s, Block)]
+    groups = _program_groups(opt)
     if backend == "reference":
         # the interpreter launches no kernels and ignores grouping
         fn = lambda arrays: execute_reference(semantic, arrays)  # noqa: E731
@@ -173,6 +181,12 @@ def compile_cached(prog: Program, hw: HardwareConfig,
                    use_disk: bool = True) -> Tuple[Program, CompileRecord]:
     """Run the pass pipeline under the compilation cache; no lowering.
 
+    This is the sweep-friendly compile entry: no backend is built or
+    executed, yet the record still carries the fusion groups / kernel
+    count and the full pass trace, so the explore subsystem can score a
+    point analytically (``cost.score_pass_trace``) straight from it — or,
+    on a disk hit, from the persisted payload without recompiling.
+
     Returns a deep copy on memory hits so callers can mutate freely.
     """
     if cache is None:
@@ -183,22 +197,30 @@ def compile_cached(prog: Program, hw: HardwareConfig,
         ir_fingerprint(prog), hw.fingerprint(),
     )
     hit = cache.get_memory(key)
-    if isinstance(hit, Program):
-        rec = CompileRecord(key=key, backend="", hw_name=hw.name, cache_hit=True,
-                            compile_time_s=time.perf_counter() - t0)
-        return copy.deepcopy(hit), rec
+    if isinstance(hit, tuple) and len(hit) == 2 and isinstance(hit[0], Program):
+        # the memory tier holds (optimized program, cold record): hit
+        # records keep the cold compile's tilings/trace, so they stay
+        # scorable (cost.score_pass_trace) even with the disk tier off
+        prog0, rec0 = hit
+        rec = dataclasses.replace(copy.deepcopy(rec0), cache_hit=True,
+                                  disk_hit=False,
+                                  compile_time_s=time.perf_counter() - t0)
+        return copy.deepcopy(prog0), rec
     payload = cache.get_disk(key) if use_disk else None
     oracle = TilingOracle(known=(payload or {}).get("tilings"))
     pm = PassManager(hw, oracle=oracle, autotune_workers=workers)
     opt = pm.run(copy.deepcopy(prog))
+    groups = _program_groups(opt)
     rec = CompileRecord(key=key, backend="", hw_name=hw.name,
                         disk_hit=payload is not None,
                         compile_time_s=time.perf_counter() - t0,
-                        tilings=dict(oracle.chosen), pass_trace=list(pm.trace))
-    cache.put_memory(key, opt)
+                        tilings=dict(oracle.chosen), pass_trace=list(pm.trace),
+                        n_kernels=len(groups), groups=groups)
+    cache.put_memory(key, (opt, rec))
     if use_disk:
         cache.put_disk(key, {"tilings": oracle.chosen, "pass_trace": pm.trace,
-                             "hw": hw.name, "compile_time_s": rec.compile_time_s})
+                             "hw": hw.name, "compile_time_s": rec.compile_time_s,
+                             "n_kernels": rec.n_kernels, "groups": groups})
     return copy.deepcopy(opt), rec
 
 

@@ -46,7 +46,9 @@ class HardwareConfig:
         for m in self.mem_units:
             if m.name == name:
                 return m
-        raise KeyError(name)
+        raise KeyError(
+            f"no memory unit {name!r} in hardware config {self.name!r}; "
+            f"available units: {[m.name for m in self.mem_units]}")
 
     def inner_mem(self) -> MemoryUnit:
         return self.mem_units[1] if len(self.mem_units) > 1 else self.mem_units[0]
@@ -55,11 +57,14 @@ class HardwareConfig:
         """Stable content hash of everything that can change compilation
         output: memory hierarchy, stencils, roofline terms, and the pass
         pipeline with its parameters (order-sensitive; param-key order is
-        not).  Used as the hardware component of compilation-cache keys."""
+        not).  The config *name* is deliberately excluded — two configs
+        that compile identically hash identically, so design-space sweeps
+        dedupe renamed-but-equal points into one compilation-cache entry.
+        Used as the hardware component of compilation-cache keys."""
         from .cache import stable_hash
 
         return stable_hash([
-            "hwconfig", self.name,
+            "hwconfig",
             [[m.name, m.size_bytes, m.bandwidth, m.cache_line_elems] for m in self.mem_units],
             [[s.name, list(s.dims), s.flops] for s in self.stencils],
             self.peak_flops, self.ici_link_bw,
@@ -78,6 +83,39 @@ class HardwareConfig:
                     p[k[len(pref):]] = v
             new_passes.append((name, p))
         return dataclasses.replace(self, passes=tuple(new_passes))
+
+    # ---------------------------------------------------------------- sweeps
+    # Space-mutation helpers for design-space exploration (repro.explore):
+    # each returns a new config with one structural knob turned, leaving
+    # everything else (including the pass pipeline) intact.
+    def renamed(self, name: str) -> "HardwareConfig":
+        return dataclasses.replace(self, name=name)
+
+    def with_mem(self, unit: str, **overrides) -> "HardwareConfig":
+        """Replace fields of one memory unit (e.g. ``with_mem("VMEM",
+        size_bytes=64 << 20)``)."""
+        self.mem(unit)  # raise the descriptive KeyError on a bad name
+        units = tuple(
+            dataclasses.replace(m, **overrides) if m.name == unit else m
+            for m in self.mem_units)
+        return dataclasses.replace(self, mem_units=units)
+
+    def with_stencil(self, stencil: str, **overrides) -> "HardwareConfig":
+        """Replace fields of one compute stencil (e.g. ``with_stencil(
+        "mxu", dims=(256, 256, 128))``)."""
+        if not any(s.name == stencil for s in self.stencils):
+            raise KeyError(
+                f"no stencil {stencil!r} in hardware config {self.name!r}; "
+                f"available stencils: {[s.name for s in self.stencils]}")
+        stencils = tuple(
+            dataclasses.replace(s, **overrides) if s.name == stencil else s
+            for s in self.stencils)
+        return dataclasses.replace(self, stencils=stencils)
+
+    def without_pass(self, name: str) -> "HardwareConfig":
+        """Drop one pass from the pipeline (pipeline-variant sweeps)."""
+        return dataclasses.replace(
+            self, passes=tuple(p for p in self.passes if p[0] != name))
 
 
 # ---------------------------------------------------------------------------
@@ -98,7 +136,9 @@ TPU_V5E = HardwareConfig(
     peak_flops=197e12,
     ici_link_bw=50e9,
     passes=(
-        ("fuse", {}),
+        # prefer is explicit (its implicit default) so a sweep point that
+        # sets it to the stock value fingerprints identically to stock
+        ("fuse", {"prefer": "epilogue"}),
         ("autotile", {
             "cost": "roofline",
             "search": "pow2",
@@ -154,3 +194,14 @@ CPU_TEST = HardwareConfig(
 REGISTRY: Dict[str, HardwareConfig] = {
     c.name: c for c in (TPU_V5E, PAPER_FIG4, CPU_TEST)
 }
+
+
+def get_config(name: str) -> HardwareConfig:
+    """The registry accessor — the one way the rest of the framework (and
+    the ``repro.explore`` sweeps) should name a hardware config."""
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown hardware config {name!r}; "
+            f"available configs: {sorted(REGISTRY)}") from None

@@ -23,7 +23,7 @@ from typing import Callable, Dict, Mapping, Optional, Tuple
 import jax.numpy as jnp
 
 from .frontend import TileProgram
-from .hwconfig import TPU_V5E, HardwareConfig
+from .hwconfig import HardwareConfig, get_config
 from .ir import Block, Program
 from .lower_jnp import lower_program_jnp
 from .lower_pallas import UnsupportedPallas, lower_program_pallas
@@ -88,7 +88,7 @@ def _compiled_linear(m: int, k: int, n: int, dtype: str, acc_dtype: str,
     else:
         tp.output("O", (m, n), dtype)
         tp.op("O[i, j] += X[i, c] * W[c, j]")
-    return CompiledOp(tp.build(), TPU_V5E, backend)
+    return CompiledOp(tp.build(), get_config("tpu_v5e"), backend)
 
 
 def linear(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,

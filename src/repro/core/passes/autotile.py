@@ -204,6 +204,7 @@ def _oracle_key(block: Block) -> str:
 @register("autotile")
 def autotile_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
     oracle = params.get("_oracle")
+    report = params.get("_report")
     new_stmts = []
     for s in prog.entry.stmts:
         if not isinstance(s, Block) or not ({"contraction", "elementwise"} & s.tags) or "grid" in s.tags:
@@ -222,6 +223,16 @@ def autotile_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program
                 oracle.searches += 1
         if oracle is not None:
             oracle.record(key, tiles)
+        if report is not None:
+            # per-block analytic record — cost.score_pass_trace aggregates
+            # these into the explore subsystem's predicted-latency axis
+            report.append({
+                "block": s.name, "tiles": dict(tiles), "cost": cost.cost,
+                "t_mem": cost.t_mem, "t_compute": cost.t_compute,
+                "bytes_hbm": cost.bytes_hbm, "macs": cost.macs,
+                "mem_bytes": cost.mem_bytes, "n_tiles": cost.n_tiles,
+                "feasible": cost.feasible,
+            })
         if all(tiles.get(v, free[v]) >= free[v] for v in free) and cost.feasible:
             # whole op fits in one tile: keep flat, mark it
             s.add_tag("fits_inner")

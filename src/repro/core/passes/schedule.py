@@ -47,8 +47,24 @@ def wavefronts(deps: List[Set[int]]) -> List[int]:
     return level
 
 
+def program_arena_peak(prog: Program) -> int:
+    """Largest scheduled arena (bytes) across the program's grid blocks,
+    read back from the ``arena:<bytes>`` tags the pass leaves — the VMEM
+    pressure axis of the explore subsystem's Pareto report."""
+    peak = 0
+    for s in prog.entry.stmts:
+        if not isinstance(s, Block):
+            continue
+        for g in s.walk():
+            for t in g.tags:
+                if t.startswith("arena:"):
+                    peak = max(peak, int(t.split(":", 1)[1]))
+    return peak
+
+
 @register("schedule")
 def schedule_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
+    report = params.get("_report")
     blocks = [s for s in prog.entry.stmts if isinstance(s, Block)]
     deps = dependency_dag(blocks)
     levels = wavefronts(deps)
@@ -74,4 +90,6 @@ def schedule_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program
                         addr += arena_bytes([size])
             if addr > 0:
                 g.add_tag(f"arena:{addr}")
+                if report is not None:
+                    report.append({"block": b.name, "arena_bytes": addr})
     return prog

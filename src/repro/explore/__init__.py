@@ -1,0 +1,33 @@
+"""Design-space exploration — the paper's closing claim made executable.
+
+Because the :class:`~repro.core.hwconfig.HardwareConfig` is the only
+hardware-specific artifact in the compiler, sweeping memory hierarchies,
+stencils, and pass parameterizations never touches an operation or a
+pass.  This subsystem turns that property into an engine:
+
+* :mod:`repro.explore.space`     — declarative search spaces over config
+  fields and pass parameters (grid / random / hillclimb enumeration);
+* :mod:`repro.explore.workloads` — the scenario corpus every point is
+  scored on (matmul chains, attention, MoE FFN, the paper's conv);
+* :mod:`repro.explore.runner`    — the parallel sweep driver: compile
+  through the cached pipeline, dedupe by config fingerprint, score with
+  the analytic cost model, optionally validate top-K by measurement;
+* :mod:`repro.explore.report`    — Pareto-frontier extraction (predicted
+  latency x VMEM pressure x kernels launched), JSON + markdown.
+
+CLI::
+
+    python -m repro.explore --space tpu-sweep --workloads default --budget 32
+"""
+from .report import build_report, dominating_baseline, pareto_front, to_markdown, write_report
+from .runner import PointResult, SweepResult, run_sweep, score_config, validate_top_k
+from .space import Axis, SearchSpace, apply_axis, get_space, BUILTIN_SPACES
+from .workloads import CORPORA, Workload, get_workloads
+
+__all__ = [
+    "Axis", "SearchSpace", "apply_axis", "get_space", "BUILTIN_SPACES",
+    "Workload", "get_workloads", "CORPORA",
+    "PointResult", "SweepResult", "run_sweep", "score_config", "validate_top_k",
+    "pareto_front", "dominating_baseline", "build_report", "to_markdown",
+    "write_report",
+]

@@ -1,0 +1,73 @@
+"""``python -m repro.explore`` — run a design-space sweep and report
+Pareto frontiers.
+
+Example::
+
+    python -m repro.explore --space tpu-sweep --workloads default \
+        --budget 32 --strategy grid --top-k 3 --out explore_out
+
+Prints the markdown report and writes ``explore_report.json`` +
+``explore_report.md`` under ``--out``.  The sweep's compilation cache
+lives under ``--cache-dir`` (default ``<out>/cache``; honors
+``$STRIPE_CACHE_DIR`` only when passed explicitly) so exploration never
+pollutes the user's ``~/.cache/stripe-repro``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .report import to_markdown, write_report
+from .runner import run_sweep
+from .space import BUILTIN_SPACES, get_space
+from .workloads import CORPORA
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.explore",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--space", default="tpu-sweep",
+                    help=f"built-in search space: {sorted(BUILTIN_SPACES)}")
+    ap.add_argument("--workloads", default="default",
+                    help=f"corpus name {sorted(CORPORA)} or comma-separated workloads")
+    ap.add_argument("--budget", type=int, default=32,
+                    help="max sweep points to enumerate (default 32)")
+    ap.add_argument("--strategy", default="grid",
+                    choices=("grid", "random", "hillclimb"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--top-k", type=int, default=3, dest="top_k",
+                    help="validate the K best predicted points by real "
+                         "measurement (0 disables)")
+    ap.add_argument("--backend", default="jnp",
+                    help="measurement backend for --top-k (default jnp)")
+    ap.add_argument("--parallel", type=int, default=0,
+                    help="process-pool width for scoring unique points "
+                         "(0/1 = serial)")
+    ap.add_argument("--out", default="explore_out",
+                    help="output directory for the JSON/markdown report")
+    ap.add_argument("--cache-dir", default=None,
+                    help="compilation-cache directory (default <out>/cache)")
+    args = ap.parse_args(argv)
+
+    try:
+        space = get_space(args.space)
+    except KeyError as e:
+        ap.error(str(e))
+    cache_dir = args.cache_dir or f"{args.out}/cache"
+
+    sweep = run_sweep(
+        space, args.workloads, budget=args.budget, strategy=args.strategy,
+        seed=args.seed, cache_dir=cache_dir, parallel=args.parallel,
+        measure_top_k=args.top_k, measure_backend=args.backend)
+    jpath, mpath = write_report(sweep, args.out)
+    print(to_markdown(sweep))
+    print(f"wrote {jpath} and {mpath}")
+    n_err = sum(1 for p in sweep.points if p.error)
+    if n_err:
+        print(f"warning: {n_err} point(s) failed to score", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,8 +32,9 @@ def choose_block_sizes(seq_q: int, seq_k: int, head_dim: int) -> Tuple[int, int]
     the autotile search entirely.
     """
     from ...core import cache as stripe_cache
-    from ...core.hwconfig import TPU_V5E
+    from ...core.hwconfig import get_config
 
+    hw = get_config("tpu_v5e")
     params = {"cost": "roofline", "search": "pow2", "mem_cap_frac": 0.2, "count_untiled": True}
     memo_version = 1  # bump when the clamp logic below changes
 
@@ -47,14 +48,14 @@ def choose_block_sizes(seq_q: int, seq_k: int, head_dim: int) -> Tuple[int, int]
              "S": ((seq_q, seq_k), "float32")},
             out="S",
         )
-        tiles, _cost = choose_tiling(prog.entry.stmts[0], TPU_V5E, params)
+        tiles, _cost = choose_tiling(prog.entry.stmts[0], hw, params)
         bq = max(min(tiles.get("q", 512), seq_q), min(128, seq_q))
         bk = max(min(tiles.get("k", 512), seq_k), min(128, seq_k))
         return [bq, bk]
 
     bq, bk = stripe_cache.memoize(
         "flash_attn_blocks",
-        [memo_version, seq_q, seq_k, head_dim, sorted(params.items()), TPU_V5E.fingerprint()],
+        [memo_version, seq_q, seq_k, head_dim, sorted(params.items()), hw.fingerprint()],
         search)
     return int(bq), int(bk)
 

@@ -34,8 +34,9 @@ def choose_chunk(seq: int, dk: int, dv: int) -> int:
     contraction H[t,p] += S[t,s] * V[s,p]; memoized through the
     compilation cache so warm processes skip the search."""
     from ...core import cache as stripe_cache
-    from ...core.hwconfig import TPU_V5E
+    from ...core.hwconfig import get_config
 
+    hw = get_config("tpu_v5e")
     params = {"cost": "roofline", "search": "pow2", "mem_cap_frac": 0.1}
     memo_version = 1  # bump when the clamp logic below changes
 
@@ -49,7 +50,7 @@ def choose_chunk(seq: int, dk: int, dv: int) -> int:
              "H": ((seq, dv), "float32")},
             out="H",
         )
-        tiles, _ = choose_tiling(prog.entry.stmts[0], TPU_V5E, params)
+        tiles, _ = choose_tiling(prog.entry.stmts[0], hw, params)
         c = min(tiles.get("t", 256), 256)
         while seq % c != 0:
             c //= 2
@@ -57,7 +58,7 @@ def choose_chunk(seq: int, dk: int, dv: int) -> int:
 
     return int(stripe_cache.memoize(
         "mlstm_chunk_len",
-        [memo_version, seq, dk, dv, sorted(params.items()), TPU_V5E.fingerprint()],
+        [memo_version, seq, dk, dv, sorted(params.items()), hw.fingerprint()],
         search))
 
 

@@ -13,7 +13,7 @@ from typing import Callable, Optional
 
 from ...core.driver import compile_cached
 from ...core.frontend import TileProgram
-from ...core.hwconfig import TPU_V5E
+from ...core.hwconfig import get_config
 from ...core.ir import Block
 from ...core.lower_pallas import lower_op_pallas
 from ...core.passes import compile_program
@@ -43,7 +43,7 @@ def build_matmul_kernel(m: int, k: int, n: int, dtype: str = "float32",
         tp.op("O[i, j] += X[i, c] * W[c, j]")
     # the persistent compilation cache replays the tiling choice on warm
     # processes; the lru_cache above only helps within this one
-    prog, _record = compile_cached(tp.build(), TPU_V5E)
+    prog, _record = compile_cached(tp.build(), get_config("tpu_v5e"))
     blocks = [s for s in prog.entry.stmts if isinstance(s, Block)]
     assert len(blocks) == 1, f"expected one fused block, got {len(blocks)}"
     fn = lower_op_pallas(blocks[0], interpret=interpret)
@@ -64,5 +64,5 @@ def describe_kernel(m: int, k: int, n: int, dtype: str = "float32") -> str:
     tp.input("W", (k, n), dtype)
     tp.output("O", (m, n), dtype)
     tp.op("O[i, j] += X[i, c] * W[c, j]")
-    prog = compile_program(tp.build(), TPU_V5E)
+    prog = compile_program(tp.build(), get_config("tpu_v5e"))
     return prog.pretty()

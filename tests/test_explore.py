@@ -1,0 +1,260 @@
+"""Design-space exploration subsystem (repro.explore).
+
+The compilation cache these sweeps write is isolated per-test by the
+autouse ``_isolated_stripe_cache`` conftest fixture (STRIPE_CACHE_DIR ->
+tmpdir), and every sweep here additionally passes an explicit tmpdir
+``cache_dir`` — explore runs never touch ``~/.cache/stripe-repro``.
+"""
+import json
+
+import pytest
+
+from repro.core.hwconfig import get_config
+from repro.explore import (
+    Axis,
+    SearchSpace,
+    apply_axis,
+    build_report,
+    dominating_baseline,
+    get_space,
+    get_workloads,
+    pareto_front,
+    run_sweep,
+    to_markdown,
+    write_report,
+)
+from repro.explore.runner import PointResult
+
+
+def _tiny_space() -> SearchSpace:
+    """A fast CPU space whose axes provably change predicted latency
+    (bandwidth scales t_mem, peak-flops scales t_compute)."""
+    return SearchSpace(
+        name="tiny-cpu", base="cpu_test",
+        axes=(
+            Axis("mem.RAM.bandwidth", (50e9, 200e9), default=50e9),
+            Axis("peak_flops", (1e11, 8e11), default=1e11),
+        ))
+
+
+# --------------------------------------------------------------------------
+# space
+# --------------------------------------------------------------------------
+def test_space_grid_leads_with_stock_and_respects_budget():
+    sp = get_space("tpu-sweep")
+    pts = sp.grid(9)
+    assert len(pts) == 9
+    assert pts[0] == sp.default_point()
+    assert sp.point_name(pts[0]) == "tpu_v5e"
+    # subsample keeps points unique
+    keys = {tuple(p[a.path] for a in sp.axes) for p in pts}
+    assert len(keys) == 9
+
+
+def test_space_grid_budget_one_is_just_the_stock_point():
+    sp = get_space("tpu-sweep")
+    assert sp.grid(1) == [sp.default_point()]
+    assert len(sp.grid(2)) == 2
+
+
+def test_space_apply_pipeline_variant_and_params():
+    sp = get_space("tpu-sweep")
+    point = dict(sp.default_point())
+    point["pipeline"] = "no-fuse"
+    point["autotile.mem_cap_frac"] = 0.9
+    hw = sp.apply(point)
+    assert all(name != "fuse" for name, _ in hw.passes)
+    assert dict(hw.passes)["autotile"]["mem_cap_frac"] == 0.9
+    assert "no-fuse" in hw.name and "0.9" in hw.name
+
+
+def test_space_stock_point_fingerprints_equal_base():
+    for name in ("tpu-sweep", "cacheline-sweep"):
+        sp = get_space(name)
+        assert sp.apply(sp.default_point()).fingerprint() == \
+            sp.base_config().fingerprint()
+
+
+def test_apply_axis_paths_and_errors():
+    hw = get_config("tpu_v5e")
+    assert apply_axis(hw, "mem.VMEM.size_bytes", 1 << 20).mem("VMEM").size_bytes == 1 << 20
+    assert apply_axis(hw, "stencil.mxu.dims", (256, 256, 128)).stencils[0].dims == (256, 256, 128)
+    assert apply_axis(hw, "peak_flops", 1.0).peak_flops == 1.0
+    with pytest.raises(ValueError):
+        apply_axis(hw, "not.a.real.path", 1)
+    with pytest.raises(KeyError):
+        apply_axis(hw, "pipeline", "no-such-variant")
+    with pytest.raises(KeyError):
+        get_space("no-such-space")
+
+
+def test_space_random_is_seeded_and_deduped():
+    sp = _tiny_space()
+    a = sp.random(4, seed=7)
+    b = sp.random(4, seed=7)
+    assert a == b
+    keys = {tuple(p[ax.path] for ax in sp.axes) for p in a}
+    assert len(keys) == len(a) == 4  # tiny space: all points enumerable
+
+
+# --------------------------------------------------------------------------
+# workloads
+# --------------------------------------------------------------------------
+def test_workload_corpus_builds_valid_programs():
+    from repro.core import validate_program
+
+    for w in get_workloads("all"):
+        prog = w.build()
+        validate_program(prog)
+        assert prog.inputs and prog.outputs
+
+
+def test_get_workloads_specs():
+    assert [w.name for w in get_workloads("quick")] == ["mm_bias_gelu", "fig4_conv"]
+    assert [w.name for w in get_workloads("attn_scores,moe_ffn")] == \
+        ["attn_scores", "moe_ffn"]
+    with pytest.raises(KeyError):
+        get_workloads("no_such_workload")
+
+
+# --------------------------------------------------------------------------
+# pareto
+# --------------------------------------------------------------------------
+def _pt(i, lat, vmem, kern, dedup=None, err=""):
+    return PointResult(index=i, config_name=f"c{i}", fingerprint=f"f{i}",
+                       point={}, latency_s=lat, vmem_peak_bytes=vmem,
+                       n_kernels=kern, dedup_of=dedup, error=err)
+
+
+def test_pareto_front_extracts_non_dominated_set():
+    pts = [
+        _pt(0, 1.0, 100, 2),   # dominated by 1
+        _pt(1, 0.5, 100, 2),   # front
+        _pt(2, 0.8, 50, 2),    # front (better vmem)
+        _pt(3, 0.5, 100, 1),   # front (dominates 1 on kernels)
+        _pt(4, 0.5, 100, 1, dedup=3),  # deduped: excluded
+        _pt(5, 9.9, 999, 9, err="boom"),  # errored: excluded
+    ]
+    assert set(pareto_front(pts)) == {2, 3}
+    # point 1 is dominated by 3 (equal latency+vmem, fewer kernels)
+    assert 1 not in pareto_front(pts)
+
+
+# --------------------------------------------------------------------------
+# runner: end-to-end sweeps
+# --------------------------------------------------------------------------
+def test_grid_sweep_scores_dedupes_and_dominates(tmp_path):
+    sp = _tiny_space()
+    sweep = run_sweep(sp, "quick", budget=4, strategy="grid",
+                      cache_dir=str(tmp_path / "cache"))
+    assert len(sweep.points) == 4
+    assert not any(p.error for p in sweep.points)
+    # the stock point dedupes against the baseline compile (-1)
+    assert sweep.points[0].dedup_of == -1
+    assert sweep.points[0].latency_s == sweep.baseline.latency_s > 0
+    # every point carries per-workload scores on the corpus
+    for p in sweep.points:
+        assert set(p.scores) == {"mm_bias_gelu", "fig4_conv"}
+        assert p.vmem_peak_bytes > 0 and p.n_kernels > 0
+    # 4x bandwidth + 8x flops strictly dominates stock predicted latency
+    dom = dominating_baseline(sweep)
+    assert any(dom.values()), dom
+    best = min(sweep.unique_points(), key=lambda p: p.latency_s)
+    assert best.latency_s < sweep.baseline.latency_s
+
+
+def test_sweep_dedupes_equal_fingerprints_between_points(tmp_path):
+    # two pipeline-irrelevant settings of fuse.prefer under no-fuse
+    sp = SearchSpace(
+        name="collide", base="tpu_v5e",
+        axes=(
+            Axis("pipeline", ("no-fuse",), default="no-fuse"),
+            Axis("fuse.prefer", ("epilogue", "prologue"), default="epilogue"),
+        ))
+    sweep = run_sweep(sp, "quick", budget=4, strategy="grid",
+                      cache_dir=str(tmp_path / "cache"))
+    dedup = [p for p in sweep.points if p.dedup_of is not None and p.dedup_of >= 0]
+    assert len(dedup) == 1
+    orig = sweep.points[dedup[0].dedup_of]
+    assert dedup[0].fingerprint == orig.fingerprint
+    assert dedup[0].scores == orig.scores
+    # only unique fingerprints were compiled: stats show no re-search
+    assert sweep.cache_stats["puts"] > 0
+
+
+def test_hillclimb_sweep_improves_or_matches_baseline(tmp_path):
+    sp = _tiny_space()
+    sweep = run_sweep(sp, "quick", budget=5, strategy="hillclimb", seed=1,
+                      cache_dir=str(tmp_path / "cache"))
+    assert 1 <= len(sweep.points) <= 5
+    assert not any(p.error for p in sweep.points)
+    best = min(p.latency_s for p in sweep.unique_points())
+    assert best <= sweep.baseline.latency_s
+
+
+def test_sweep_without_disk_cache_still_scores():
+    sp = _tiny_space()
+    sweep = run_sweep(sp, "quick", budget=2, strategy="grid", cache_dir=None)
+    assert not any(p.error for p in sweep.points)
+    assert sweep.baseline.latency_s > 0
+
+
+def test_validation_measures_top_k_on_jnp(tmp_path):
+    sp = _tiny_space()
+    sweep = run_sweep(sp, "quick", budget=2, strategy="grid",
+                      cache_dir=str(tmp_path / "cache"),
+                      measure_top_k=1, measure_backend="jnp")
+    v = sweep.validation
+    assert v is not None and v["backend"] == "jnp"
+    # baseline + top-1, each measured on the real backend
+    assert len(v["entries"]) == 2
+    for e in v["entries"]:
+        assert e["error"] == ""
+        assert e["measured_total_us"] > 0
+        assert set(e["measured_us"]) == {"mm_bias_gelu", "fig4_conv"}
+    assert sorted(v["predicted_rank"]) == sorted(v["measured_rank"])
+
+
+# --------------------------------------------------------------------------
+# report + CLI
+# --------------------------------------------------------------------------
+def test_report_json_and_markdown(tmp_path):
+    sp = _tiny_space()
+    sweep = run_sweep(sp, "quick", budget=3, strategy="grid",
+                      cache_dir=str(tmp_path / "cache"))
+    doc = build_report(sweep)
+    assert doc["n_points"] == 3 and doc["n_errors"] == 0
+    assert doc["n_unique"] + doc["n_deduped"] == 3
+    assert doc["baseline"]["latency_s"] > 0
+    assert isinstance(doc["pareto_front"], list) and doc["pareto_front"]
+    md = to_markdown(sweep)
+    assert "baseline" in md and "Pareto" in md
+    jpath, mpath = write_report(sweep, str(tmp_path / "out"))
+    loaded = json.loads(jpath.read_text())
+    assert loaded["space"] == "tiny-cpu"
+    assert mpath.read_text() == md
+
+
+def test_cli_main_end_to_end(tmp_path):
+    from repro.explore.__main__ import main
+
+    out = tmp_path / "cli_out"
+    rc = main(["--space", "tpu-sweep", "--workloads", "quick", "--budget", "4",
+               "--top-k", "0", "--out", str(out)])
+    assert rc == 0
+    doc = json.loads((out / "explore_report.json").read_text())
+    assert doc["n_points"] == 4
+    assert (out / "explore_report.md").exists()
+    # the sweep cache landed under --out, not the user's home cache
+    assert (out / "cache").is_dir() and any((out / "cache").iterdir())
+
+
+def test_bench_hillclimb_rows_still_emitted(capsys):
+    from repro.explore.hillclimb import roofline_hillclimb
+
+    rows = []
+    roofline_hillclimb(emit=lambda n, us, d: rows.append((n, us, d)))
+    names = [r[0] for r in rows]
+    assert "stripe_hillclimb/autotile" in names
+    assert "stripe_hillclimb/pipeline_fuses_ffn" in names
+    assert rows[-1][2] == 1  # the pipeline really fuses the ffn
