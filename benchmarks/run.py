@@ -16,9 +16,11 @@ example, both reproduced exactly):
   before/after the pass pipeline (semantics asserted equal).
 
 Framework benches: the stripe_jit compile cache (cold vs warm-memory vs
-warm-disk), Stripe-matmul kernel vs plain einsum (CPU wall time), per-arch
-reduced train step, flash-attention block-size choice, and the §Perf
-hillclimb (see stripe_hillclimb.py).
+warm-disk), whole-program fusion groups, the liveness-based VMEM memory
+planner (arena before/after reuse + the capacity-unlock speedup),
+Stripe-matmul kernel vs plain einsum (CPU wall time), per-arch reduced
+train step, flash-attention block-size choice, and the design-space
+exploration smoke sweep.
 """
 import argparse
 import json
@@ -269,6 +271,128 @@ def bench_fusion() -> None:
          f"(backend={pallas.record.backend})\"")
 
 
+def bench_memplan() -> None:
+    """Liveness-based VMEM memory planner (core/memplan.py).
+
+    Part 1 — arena before/after reuse: compile the explore ``default``
+    corpus on stock tpu_v5e and report, per workload, the planner's peak
+    arena vs the legacy bump model (no liveness, every view blanket-
+    double-buffered) from the ``arena:``/``arena_bump:`` tags of the
+    same compile.
+
+    Part 2 — capacity unlock: a relu->square->abs chain feeding a
+    skinny matmul with a reduction-resident weight, on a VMEM-tight
+    config whose capacity sits *between* the legacy ``2x`` pressure and
+    the planner's exact footprint.  The legacy model both rejects the
+    chain inline (4 kernels, 3 materialized intermediates) and caps the
+    matmul at a smaller tile; the planner fuses the whole chain into
+    one kernel and picks a larger tile that the ``2x`` rule called
+    infeasible.  Measured jnp latency (per-group lowering, min-of-
+    rounds) quantifies the unlock."""
+    import copy
+
+    from repro.core import TileProgram, stripe_jit
+    from repro.core.cost import score_pass_trace
+    from repro.core.driver import compile_cached
+    from repro.core.hwconfig import get_config
+    from repro.core.lower_jnp import lower_program_jnp
+    from repro.explore.workloads import get_workloads
+
+    # ---- part 1: default-corpus arena peaks (planner vs bump) -------------
+    # read from the schedule pass's report: the planner's per-block arena
+    # vs the legacy bump model priced on the same views (NOT the score's
+    # vmem_peak_bytes, which also floors at the autotile tile footprint)
+    hw0 = get_config("tpu_v5e")
+    workloads = get_workloads("default")
+    lower = 0
+    for w in workloads:
+        _, rec = compile_cached(w.build(), hw0, use_disk=False)
+        sched = [r for e in rec.pass_trace if e[0] == "schedule"
+                 for r in e[2] if isinstance(r, dict)]
+        planner_peak = max((r.get("arena_bytes", 0) for r in sched), default=0)
+        bump_peak = max((r.get("arena_bump_bytes", 0) for r in sched), default=0)
+        if 0 < planner_peak < bump_peak:
+            lower += 1
+        emit(f"memplan_arena/{w.name}", 0.0, f"\"{planner_peak}/{bump_peak}B\"")
+    emit("memplan_arena_workloads_lower", 0.0, f"{lower}/{len(workloads)}")
+
+    # ---- part 2: capacity unlock on a VMEM-tight config -------------------
+    m, n, n2 = 1024, 4096, 32
+
+    def chain():
+        tp = TileProgram("memplan_chain")
+        tp.input("X", (m, n))
+        tp.input("W2", (n, n2))
+        tp.temp("Y1", (m, n))
+        tp.temp("Y2", (m, n))
+        tp.temp("X2", (m, n))
+        tp.output("O", (m, n2))
+        tp.op("Y1[i, j] = relu(X[i, j])", name="pre1")
+        tp.op("Y2[i, j] = square(Y1[i, j])", name="pre2")
+        tp.op("X2[i, j] = abs(Y2[i, j])", name="pre3")
+        tp.op("O[i, j2] += X2[i, j] * W2[j, j2]", name="mm")
+        return tp.build()
+
+    # cap = 0.29 * 16 MiB = 4.87 MB sits between the planner's exact
+    # pressure of the chain-inline trial (~4.6 MB: W2 resident, one
+    # accumulator slot) and the legacy 2x rule (~5.06 MB)
+    hw = (get_config("tpu_v5e").with_mem("VMEM", size_bytes=16 * 2**20)
+          .with_params(**{"autotile.mem_cap_frac": 0.29,
+                          "fuse.mem_cap_frac": 0.29}))
+    legacy = hw.with_params(**{"fuse.memplan": False, "autotile.memplan": False,
+                               "schedule.memplan": False})
+    recs = {}
+    for name, cfg in (("planner", hw), ("legacy", legacy)):
+        c = stripe_jit(chain(), cfg, backend="jnp", use_disk=False)
+        recs[name] = c.record
+    assert recs["planner"].n_kernels == 1 and recs["legacy"].n_kernels == 4
+
+    def mm_rec(rec):
+        for e in rec.pass_trace:
+            if e[0] == "autotile":
+                for r in e[2]:
+                    if r["block"] == "mm":
+                        return r
+        raise AssertionError("no autotile record for mm")
+
+    mm_p, mm_l = mm_rec(recs["planner"]), mm_rec(recs["legacy"])
+    cap = int(16 * 2**20 * 0.29)
+    # the planner's (larger) tile was infeasible under the legacy 2x rule
+    assert mm_p["mem_bytes"] > mm_l["mem_bytes"]
+    assert 2 * mm_p["mem_bytes"] > cap >= mm_p["plan_bytes"]
+    lat_p = score_pass_trace(recs["planner"].pass_trace).latency_s
+    lat_l = score_pass_trace(recs["legacy"].pass_trace).latency_s
+    emit("memplan_tiles_planner", 0.0, f"\"{mm_p['tiles']} ({mm_p['mem_bytes']}B)\"")
+    emit("memplan_tiles_legacy", 0.0, f"\"{mm_l['tiles']} ({mm_l['mem_bytes']}B)\"")
+    emit("memplan_pred_speedup", 0.0, f"{lat_l / lat_p:.2f}x")
+
+    prog = chain()
+    rng = np.random.RandomState(0)
+    arrays = {"X": jnp.asarray(rng.randn(m, n), jnp.float32),
+              "W2": jnp.asarray(rng.randn(n, n2), jnp.float32)}
+    fn_p = lower_program_jnp(copy.deepcopy(prog), groups=recs["planner"].groups,
+                             jit_scope="group")
+    fn_l = lower_program_jnp(copy.deepcopy(prog), groups=recs["legacy"].groups,
+                             jit_scope="group")
+    a = np.asarray(fn_p(arrays)["O"])
+    b = np.asarray(fn_l(arrays)["O"])
+    assert np.allclose(a, b, rtol=1e-4, atol=1e-4)
+    for _ in range(2):
+        _timeit(fn_l, arrays, n=2, warmup=1)
+        _timeit(fn_p, arrays, n=2, warmup=1)
+    t_l, t_p = [], []
+    for r in range(8):
+        pair = [(_timeit(fn_l, arrays, n=3, warmup=0), t_l),
+                (_timeit(fn_p, arrays, n=3, warmup=0), t_p)]
+        if r % 2:
+            pair.reverse()
+        for t, acc in pair:
+            acc.append(t)
+    emit("memplan_measured_legacy", min(t_l), recs["legacy"].n_kernels)
+    emit("memplan_measured_planner", min(t_p), recs["planner"].n_kernels)
+    emit("memplan_measured_speedup", 0.0, f"{min(t_l) / min(t_p):.2f}x")
+
+
 def bench_stripe_matmul() -> None:
     from repro.kernels.stripe_matmul.ops import matmul, matmul_ref
 
@@ -357,6 +481,7 @@ BENCHES = {
     "fig5": bench_fig5_rewrite,
     "cache": bench_stripe_jit_cache,
     "fusion": bench_fusion,
+    "memplan": bench_memplan,
     "explore": bench_explore,
     "matmul": bench_stripe_matmul,
     "flash": bench_flash_attention_blocks,

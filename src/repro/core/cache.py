@@ -30,7 +30,10 @@ from typing import Any, Callable, Dict, Optional
 # v2: tiling-oracle entries are keyed by block name + group fingerprint
 # (fusion-group tilings replay as a unit); v1 name-keyed payloads are
 # invalidated wholesale by the version bump.
-CACHE_VERSION = 2
+# v3: pass traces carry the memory-planner arenas (arena/arena_bump,
+# wavefront levels) and pipelined per-block latencies — pre-planner
+# payloads would score on the legacy model, so they are invalidated.
+CACHE_VERSION = 3
 
 ENV_CACHE_DIR = "STRIPE_CACHE_DIR"
 ENV_CACHE_DISABLE = "STRIPE_CACHE_DISABLE"

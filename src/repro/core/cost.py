@@ -12,6 +12,7 @@ Two models, selected by the hardware config:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Tuple
 
@@ -34,6 +35,25 @@ class TileCost:
     n_tiles: int = 1
     feasible: bool = True
     why: str = ""
+    latency_s: float = 0.0  # pipelined per-block latency (pipelined_latency)
+    plan_bytes: int = 0     # planner-exact VMEM footprint of one tile
+
+
+def pipelined_latency(t_mem: float, t_compute: float, n_tiles: int,
+                      depth: int) -> float:
+    """Predicted block latency under a depth-``depth`` double-buffered
+    grid pipeline: prologue (first tile's fetch) + steady state (memory
+    and compute overlap, the dominant per-step term repeats) + drain
+    (last tile's compute).  With ``depth < 2`` (no double buffering) or
+    a single tile there is nothing to overlap and the terms serialize.
+    Depths beyond 2 change the memory *footprint* (more slots), not the
+    steady state — one buffer ahead already hides the smaller term."""
+    n = max(int(n_tiles), 1)
+    if depth < 2 or n <= 1:
+        return t_mem + t_compute
+    step_mem = t_mem / n
+    step_comp = t_compute / n
+    return step_mem + (n - 1) * max(step_mem, step_comp) + step_comp
 
 
 def _contig_dim(ref: Refinement) -> int:
@@ -86,19 +106,41 @@ def _tile_view_shapes(block: Block, tiles: Mapping[str, int]) -> List[Tuple[Refi
     return out
 
 
-_MACS_CACHE: Dict[int, Optional[int]] = {}
+# Exact-MAC memo: keyed by IR content fingerprint (never object identity
+# — ``id()`` can be reused after GC, silently returning another block's
+# count) and bounded by a small LRU so long sweep processes never grow it
+# without bound.
+_MACS_CACHE: "collections.OrderedDict[str, Optional[int]]" = collections.OrderedDict()
+_MACS_CACHE_MAX = 128
 
 
-def count_macs_exact(block: Block, limit: int = 2_000_000) -> Optional[int]:
-    key = id(block)
+def macs_cache_key(block: Block) -> str:
+    from .ir import ir_fingerprint
+
+    return ir_fingerprint(block)
+
+
+def seed_macs_cache(key: str, value: Optional[int]) -> None:
+    """Pre-populate the exact-MAC memo (parallel autotune workers seed it
+    with the parent process's precomputed count)."""
+    _MACS_CACHE[key] = value
+    _MACS_CACHE.move_to_end(key)
+    while len(_MACS_CACHE) > _MACS_CACHE_MAX:
+        _MACS_CACHE.popitem(last=False)
+
+
+def count_macs_exact(block: Block, limit: int = 2_000_000,
+                     key: Optional[str] = None) -> Optional[int]:
+    key = key or macs_cache_key(block)
     if key in _MACS_CACHE:
+        _MACS_CACHE.move_to_end(key)
         return _MACS_CACHE[key]
     poly = block.poly
     if poly.rect_size() > limit:
         out = None
     else:
         out = poly.count()
-    _MACS_CACHE[key] = out
+    seed_macs_cache(key, out)
     return out
 
 
@@ -141,19 +183,48 @@ def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, 
             mem_elems += elems
             mem_bytes += elems * dtype_bytes(r.dtype)
 
+    # ---- planner-exact footprint of one tile -------------------------------
+    # (memplan's slot model: streamed views get pipeline_depth slots, grid-
+    # invariant views one, a revisited output one slot + f32 scratch)
+    from . import memplan
+
+    depth = hw.pipeline_depth
+    tiled_vars = {v for v in free if eff[v] < free[v]}
+    entries: List[Tuple[int, str, int]] = []
+    for r, shape, _uses, _al in views:
+        elems = 1
+        for s in shape:
+            elems *= s
+        ref_grid = {n for e in r.offsets for n in e.names()} & tiled_vars
+        is_out = r.dir in (RefDir.OUT, RefDir.INOUT)
+        revisited = is_out and bool(tiled_vars - ref_grid)
+        kind, slots = memplan.slots_for(is_out, bool(ref_grid), revisited, depth)
+        entries.append((elems * dtype_bytes(r.dtype), kind, slots))
+        if revisited:
+            entries.append((elems * 4, "scratch", 1))  # f32 partial sums
+    plan_bytes = memplan.tile_footprint_bytes(entries)
+
     cap_e = params.get("mem_cap_elems")
     cap_frac = params.get("mem_cap_frac")
     feasible = True
     why = ""
     if cap_e is not None and mem_elems > cap_e:
         feasible, why = False, f"tile footprint {mem_elems}e > cap {cap_e}e"
-    if cap_frac is not None and mem_bytes * 2 > inner_mem.size_bytes * cap_frac:
-        feasible, why = False, f"2x tile bytes {2*mem_bytes} > {cap_frac} of {inner_mem.name}"
+    if cap_frac is not None:
+        cap = inner_mem.size_bytes * cap_frac
+        if params.get("memplan", True):
+            if plan_bytes > cap:
+                feasible, why = False, (
+                    f"planned tile {plan_bytes}B > {cap_frac} of {inner_mem.name}")
+        elif mem_bytes * 2 > cap:
+            feasible, why = False, f"2x tile bytes {2*mem_bytes} > {cap_frac} of {inner_mem.name}"
 
     # ---- MACs --------------------------------------------------------------
     macs = block_points(block)
     if params.get("exact_macs"):
-        exact = count_macs_exact(block)
+        # the tile search injects the block's precomputed fingerprint so a
+        # thousand-candidate sweep hashes the IR once, not per candidate
+        exact = count_macs_exact(block, key=params.get("_macs_key"))
         if exact is not None and not any(isinstance(s, Block) for s in block.stmts):
             macs = exact
 
@@ -178,7 +249,8 @@ def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, 
         return TileCost(cost=cost, lines=total_lines, macs=macs,
                         bytes_hbm=total_bytes, t_mem=t_mem, t_compute=t_compute,
                         mem_elems=mem_elems, mem_bytes=mem_bytes, n_tiles=n_tiles,
-                        feasible=feasible, why=why)
+                        feasible=feasible, why=why, plan_bytes=plan_bytes,
+                        latency_s=pipelined_latency(t_mem, t_compute, n_tiles, depth))
 
     # ---- roofline model ----------------------------------------------------
     # HBM traffic with *consecutive* reuse, matching the Pallas emission:
@@ -238,7 +310,9 @@ def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, 
     cost = max(t_mem, t_compute) + 1e-12 * n_tiles
     return TileCost(cost=cost, macs=macs, bytes_hbm=bytes_hbm, t_mem=t_mem,
                     t_compute=t_compute, mem_elems=mem_elems, mem_bytes=mem_bytes,
-                    n_tiles=n_tiles, feasible=feasible, why=why)
+                    n_tiles=n_tiles, feasible=feasible, why=why,
+                    plan_bytes=plan_bytes,
+                    latency_s=pipelined_latency(t_mem, t_compute, n_tiles, depth))
 
 
 # --------------------------------------------------------------------------
@@ -311,14 +385,41 @@ def refetch_bytes(ref_vars, free: Mapping[str, int], out_vars, tile: Mapping[str
 def fusion_vmem_pressure(refs, ranges: Mapping[str, int], hw: HardwareConfig,
                          params: Mapping, clamp_vars=None) -> Tuple[int, int, bool]:
     """(arena bytes for one canonical tile of the candidate group, cap,
-    fits).  Pressure is priced with schedule.py's arena arithmetic and
-    doubled for the double-buffering headroom the autotiler also budgets."""
+    fits).  Pressure is priced with memplan's slot model: views streamed
+    by a clamped (grid) index get ``pipeline_depth`` slots, grid-
+    invariant views (addressed only by the resident reduction) one slot,
+    and the group's output one slot plus its f32 partial-sum scratch —
+    the same arithmetic the autotiler's feasibility check and the
+    schedule-time allocator use.  ``params["memplan"] = False`` restores
+    the legacy blanket rule (everything double-buffered, no slot
+    classes)."""
+    from . import memplan
     from .passes.schedule import arena_bytes
 
     tile = canonical_tile(ranges, params, clamp_vars)
-    sizes = [tile_view_bytes(r, ranges, tile) for r in refs]
-    pressure = 2 * arena_bytes(sizes)
     cap = int(hw.inner_mem().size_bytes * params.get("mem_cap_frac", 0.45))
+    if not params.get("memplan", True):
+        sizes = [tile_view_bytes(r, ranges, tile) for r in refs]
+        pressure = 2 * arena_bytes(sizes)
+        return pressure, cap, pressure <= cap
+
+    depth = hw.pipeline_depth
+    streaming_vars = {v for v, t in tile.items() if t < ranges.get(v, 1)}
+    entries: List[Tuple[int, str, int]] = []
+    for r in refs:
+        nbytes = tile_view_bytes(r, ranges, tile)
+        ref_vars = {n for e in r.offsets for n in e.names()}
+        streamed = bool(ref_vars & streaming_vars)
+        is_out = r.dir in (RefDir.OUT, RefDir.INOUT)
+        # at fusion time the whole reduction stays inside the tile, so an
+        # output with any reduction extent is a revisited accumulator
+        revisited = is_out and any(v not in ref_vars for v in ranges)
+        kind, slots = memplan.slots_for(is_out, streamed, revisited, depth)
+        entries.append((nbytes, kind, slots))
+        if revisited:
+            elems = nbytes // max(dtype_bytes(r.dtype), 1)
+            entries.append((elems * 4, "scratch", 1))
+    pressure = memplan.tile_footprint_bytes(entries)
     return pressure, cap, pressure <= cap
 
 
@@ -336,12 +437,15 @@ class ProgramScore:
     can be scored from a disk-cache payload without recompiling — the
     sweep runner's fingerprint dedupe path."""
 
-    latency_s: float = 0.0       # sum over blocks of max(t_mem, t_compute)
+    latency_s: float = 0.0       # pipelined-wavefront latency (see below)
+    latency_serial_s: float = 0.0  # blocks serialized (the legacy model)
     bytes_hbm: float = 0.0
     flops: float = 0.0
-    vmem_peak_bytes: int = 0     # largest scheduled arena across grid blocks
+    vmem_peak_bytes: int = 0     # largest planned arena across blocks
+    vmem_bump_peak_bytes: int = 0  # same views under the legacy bump model
     n_kernels: int = 0           # fusion groups = dispatch units
     n_blocks: int = 0
+    n_levels: int = 0            # wavefront levels the schedule found
     per_block: List[Dict] = dataclasses.field(default_factory=list)
 
     def to_json(self) -> Dict:
@@ -353,10 +457,18 @@ def score_pass_trace(trace, n_kernels: int = 0) -> ProgramScore:
     disk cache) into a :class:`ProgramScore`.
 
     The autotile pass reports each block's chosen tiling with its
-    roofline terms; the schedule pass reports per-grid-block arena bytes.
-    Latency is the sum of per-block dominant roofline terms — blocks run
-    back-to-back, which matches the per-group dispatch model."""
+    roofline terms and pipelined per-block latency; the schedule pass
+    reports per-block wavefront levels and planned arena bytes.  The
+    **pipelined wavefront model** overlaps work the schedule proved
+    independent: blocks in one wavefront level share the memory system
+    and the compute units concurrently, so a level costs
+    ``max(sum t_mem, sum t_compute, max block latency)`` and levels run
+    back-to-back.  Blocks the schedule did not level (older traces, or
+    passes that renamed blocks) serialize after the levels — which
+    degrades exactly to the legacy sum-of-blocks model."""
     score = ProgramScore(n_kernels=n_kernels)
+    recs: List[Dict] = []
+    levels: Dict[str, int] = {}
     for entry in trace or ():
         name = entry[0]
         report = entry[2] if len(entry) > 2 else []
@@ -364,20 +476,55 @@ def score_pass_trace(trace, n_kernels: int = 0) -> ProgramScore:
             for rec in report:
                 if not isinstance(rec, dict) or "t_mem" not in rec:
                     continue
-                score.latency_s += max(rec.get("t_mem", 0.0), rec.get("t_compute", 0.0))
+                recs.append(rec)
                 score.bytes_hbm += rec.get("bytes_hbm", 0.0)
                 score.flops += 2.0 * rec.get("macs", 0.0)
                 # tile footprint is the pressure floor even when no arena
                 # is scheduled (single-tile "fits_inner" blocks)
                 score.vmem_peak_bytes = max(score.vmem_peak_bytes,
-                                            int(rec.get("mem_bytes", 0)))
+                                            int(rec.get("plan_bytes",
+                                                        rec.get("mem_bytes", 0))))
                 score.n_blocks += 1
                 score.per_block.append(dict(rec))
         elif name == "schedule":
             for rec in report:
-                if isinstance(rec, dict) and "arena_bytes" in rec:
+                if not isinstance(rec, dict):
+                    continue
+                if "level" in rec and "block" in rec:
+                    levels[str(rec["block"])] = int(rec["level"])
+                if "arena_bytes" in rec:
                     score.vmem_peak_bytes = max(score.vmem_peak_bytes,
                                                 int(rec["arena_bytes"]))
+                if "arena_bump_bytes" in rec:
+                    score.vmem_bump_peak_bytes = max(
+                        score.vmem_bump_peak_bytes, int(rec["arena_bump_bytes"]))
+
+    def block_latency(rec: Dict) -> float:
+        lat = rec.get("latency_s")
+        if lat is None:
+            lat = max(rec.get("t_mem", 0.0), rec.get("t_compute", 0.0))
+        return float(lat)
+
+    def level_of(rec: Dict) -> Optional[int]:
+        name = str(rec.get("block", ""))
+        cands = [lvl for n, lvl in levels.items()
+                 if n == name or n.startswith(name + ".")]
+        return min(cands) if cands else None
+
+    by_level: Dict[int, List[Dict]] = {}
+    serial: List[Dict] = []
+    for rec in recs:
+        lvl = level_of(rec)
+        (by_level.setdefault(lvl, []) if lvl is not None else serial).append(rec)
+    for lvl in sorted(by_level):
+        group = by_level[lvl]
+        score.latency_s += max(sum(r.get("t_mem", 0.0) for r in group),
+                               sum(r.get("t_compute", 0.0) for r in group),
+                               max(block_latency(r) for r in group))
+    for rec in serial:
+        score.latency_s += block_latency(rec)
+    score.latency_serial_s = sum(block_latency(r) for r in recs)
+    score.n_levels = len(by_level)
     return score
 
 

@@ -143,7 +143,8 @@ def _program_groups(opt: Program) -> List[List[str]]:
         [s.name] for s in semantic.entry.stmts if isinstance(s, Block)]
 
 
-def _lower(opt: Program, backend: str, interpret: bool, jit: bool
+def _lower(opt: Program, backend: str, interpret: bool, jit: bool,
+           hw: Optional[HardwareConfig] = None
            ) -> Tuple[Callable, str, str, int, List[List[str]]]:
     """Returns (fn(arrays)->outputs dict, backend used, fallback reason,
     kernels launched per call, fusion groups)."""
@@ -157,7 +158,9 @@ def _lower(opt: Program, backend: str, interpret: bool, jit: bool
         from .lower_pallas import UnsupportedPallas, lower_program_pallas
 
         try:
-            fn = lower_program_pallas(opt, interpret=interpret)
+            fn = lower_program_pallas(
+                opt, interpret=interpret,
+                pipeline_depth=hw.pipeline_depth if hw is not None else 2)
             return fn, backend, "", fn.n_kernels, groups
         except UnsupportedPallas as e:
             backend, fallback = "jnp", str(e)
@@ -262,7 +265,7 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
     oracle = TilingOracle(known=(payload or {}).get("tilings"))
     pm = PassManager(hw, oracle=oracle, autotune_workers=workers)
     opt = pm.run(copy.deepcopy(prog))
-    fn, used_backend, fallback, n_kernels, groups = _lower(opt, backend, interpret, jit)
+    fn, used_backend, fallback, n_kernels, groups = _lower(opt, backend, interpret, jit, hw)
     record = CompileRecord(
         key=key, backend=used_backend, hw_name=hw.name,
         cache_hit=False, disk_hit=payload is not None,

@@ -39,6 +39,11 @@ class HardwareConfig:
     peak_flops: float = 0.0
     # roofline link terms (framework-level; chips in a pod slice)
     ici_link_bw: float = 0.0
+    # grid-pipeline depth: how many in-flight tile buffers the hardware's
+    # DMA pipeline holds per streamed view (2 = classic double buffering;
+    # 1 = no overlap — fetch and compute serialize).  Gates the pipelined
+    # latency model in cost.py and sizes memplan's streamed-view slots.
+    pipeline_depth: int = 2
     # pass pipeline: (pass_name, params) applied in order
     passes: Tuple[Tuple[str, Dict], ...] = ()
 
@@ -67,7 +72,7 @@ class HardwareConfig:
             "hwconfig",
             [[m.name, m.size_bytes, m.bandwidth, m.cache_line_elems] for m in self.mem_units],
             [[s.name, list(s.dims), s.flops] for s in self.stencils],
-            self.peak_flops, self.ici_link_bw,
+            self.peak_flops, self.ici_link_bw, self.pipeline_depth,
             [[name, sorted(params.items())] for name, params in self.passes],
         ])
 
@@ -135,6 +140,7 @@ TPU_V5E = HardwareConfig(
     ),
     peak_flops=197e12,
     ici_link_bw=50e9,
+    pipeline_depth=2,  # double-buffered BlockSpec streaming
     passes=(
         # prefer is explicit (its implicit default) so a sweep point that
         # sets it to the stock value fingerprints identically to stock
@@ -163,6 +169,7 @@ PAPER_FIG4 = HardwareConfig(
         MemoryUnit("CACHE", 512, 1e12, cache_line_elems=8),  # 512 *elements*
     ),
     peak_flops=1e12,
+    pipeline_depth=1,  # the paper's cost-model machine has no DMA pipeline
     passes=(
         ("autotile", {
             "cost": "cache_lines",

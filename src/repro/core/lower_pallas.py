@@ -42,6 +42,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import memplan
 from .ir import Block, Constant, Intrinsic, Load, Program, Refinement, RefDir, Store
 from .lower_jnp import _J_BINARY, _J_UNARY
 
@@ -414,7 +415,8 @@ def _dimension_semantics(grid_order: List[str], red_vars) -> Optional[object]:
         return None
 
 
-def _emit_contraction(plan: ContractionPlan, interpret: bool) -> Callable:
+def _emit_contraction(plan: ContractionPlan, interpret: bool,
+                      mp: Optional[memplan.BlockPlan] = None) -> Callable:
     grid = tuple(plan.grid_sizes[v] for v in plan.grid_order)
     gpos = {v: i for i, v in enumerate(plan.grid_order)}
 
@@ -432,6 +434,21 @@ def _emit_contraction(plan: ContractionPlan, interpret: bool) -> Callable:
     out_dtype = np.dtype(plan.out_ref.ref.dtype)
     out_block = plan.out_ref.block_shape
     has_red = bool(plan.red_vars)
+    # The memory plan decides scratch residency: a revisited output plans
+    # one f32 partial-sum tile that must agree with the emitter's own
+    # reduction analysis — a mismatch means the schedule placed the
+    # accumulator differently than this kernel would use it.
+    if mp is not None:
+        if (mp.acc_bytes > 0) != has_red or set(mp.red_vars) != set(plan.red_vars):
+            raise UnsupportedPallas(
+                f"memory plan disagrees with emitter: plan acc={mp.acc_bytes}B "
+                f"red={sorted(mp.red_vars)} vs emitter red={sorted(plan.red_vars)}")
+        out_elems = 1
+        for s in out_block:
+            out_elems *= s
+        if has_red and mp.acc_bytes != out_elems * 4:
+            raise UnsupportedPallas(
+                f"planned scratch {mp.acc_bytes}B != f32 out tile {out_elems * 4}B")
 
     def kernel(*refs):
         if has_red:
@@ -483,16 +500,25 @@ def _emit_contraction(plan: ContractionPlan, interpret: bool) -> Callable:
 
     kwargs = {}
     if not interpret:
-        cp = _dimension_semantics(plan.grid_order, plan.red_vars)
+        # planned slots gate the semantics: grid axes that stream the
+        # output may be reordered/parallelized by Mosaic; axes that
+        # revisit the planned accumulator carry state and stay arbitrary
+        cp = _dimension_semantics(plan.grid_order,
+                                  mp.red_vars if mp is not None else plan.red_vars)
         if cp is not None:
             kwargs["compiler_params"] = cp
+    scratch = []
+    if has_red:
+        # sized by the memory plan when available (acc_bytes == f32 out
+        # tile, verified above), else by the emitter's own analysis
+        scratch = [pltpu.VMEM(out_block, jnp.float32)]
     call = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct(out_full_shape, out_dtype),
-        scratch_shapes=[pltpu.VMEM(out_block, jnp.float32)] if has_red else [],
+        scratch_shapes=scratch,
         interpret=interpret,
         **kwargs,
     )
@@ -554,14 +580,21 @@ def _emit_elementwise(plan: ElementwisePlan, interpret: bool) -> Callable:
     return fn
 
 
-def lower_op_pallas(outer: Block, interpret: bool = False) -> Callable:
+def lower_op_pallas(outer: Block, interpret: bool = False,
+                    pipeline_depth: int = 2) -> Callable:
     """Returns fn(arrays: dict) -> output array for one optimized op block
-    or fusion group (a single ``pallas_call``)."""
+    or fusion group (a single ``pallas_call``).  ``pipeline_depth`` is the
+    hardware's DMA-pipeline depth (``HardwareConfig.pipeline_depth``),
+    threaded into the memory plan so its slot figures match the schedule's."""
     outer = _ensure_grid(outer)
     _check_no_constraints(outer)
     out_ref = next((r for r in outer.refs if r.dir in (RefDir.OUT, RefDir.INOUT)), None)
     if out_ref is None:
         raise UnsupportedPallas("no output ref")
+    # the memory plan of this kernel's grid block: slot classification
+    # (streamed / resident / accumulator) that sizes the VMEM scratch and
+    # gates dimension_semantics below
+    mp = memplan.plan_block(outer, depth=pipeline_depth)
     agg = out_ref.agg or "assign"
     if agg == "assign" and not outer.sub_blocks():
         fn = _emit_elementwise(extract_elementwise(outer), interpret)
@@ -569,7 +602,7 @@ def lower_op_pallas(outer: Block, interpret: bool = False) -> Callable:
         # a fused group's outer agg is on its local accumulator; decide by
         # whether a reduction sub-structure exists
         try:
-            fn = _emit_contraction(extract_contraction(outer), interpret)
+            fn = _emit_contraction(extract_contraction(outer), interpret, mp=mp)
         except UnsupportedPallas as contraction_err:
             try:
                 fn = _emit_elementwise(extract_elementwise(outer), interpret)
@@ -578,12 +611,13 @@ def lower_op_pallas(outer: Block, interpret: bool = False) -> Callable:
                 # the one worth recording as the fallback reason
                 raise contraction_err
     else:
-        fn = _emit_contraction(extract_contraction(outer), interpret)
+        fn = _emit_contraction(extract_contraction(outer), interpret, mp=mp)
     fn.out_buf = out_ref.from_buf
     return fn
 
 
-def lower_program_pallas(prog: Program, interpret: bool = False) -> Callable:
+def lower_program_pallas(prog: Program, interpret: bool = False,
+                         pipeline_depth: int = 2) -> Callable:
     """Lower every op block / fusion group to one Pallas kernel and
     compose them in program order; intermediates between groups live in
     outer memory (HBM).  Raises ``UnsupportedPallas`` (whole-program jnp
@@ -595,7 +629,8 @@ def lower_program_pallas(prog: Program, interpret: bool = False) -> Callable:
     written = set()
     for b in blocks:
         try:
-            fn = lower_op_pallas(b, interpret=interpret)
+            fn = lower_op_pallas(b, interpret=interpret,
+                                 pipeline_depth=pipeline_depth)
         except UnsupportedPallas as e:
             raise UnsupportedPallas(f"{b.name}: {e}")
         decl = prog.buffers.get(fn.out_buf)

@@ -55,7 +55,9 @@ class CompiledOp:
             interpret = backend == "pallas_interpret"
             try:
                 # one pallas_call per fusion group, composed in program order
-                self.pallas_fn = lower_program_pallas(self.optimized, interpret=interpret)
+                self.pallas_fn = lower_program_pallas(
+                    self.optimized, interpret=interpret,
+                    pipeline_depth=hw.pipeline_depth)
                 self.pallas_ok = True
             except UnsupportedPallas:
                 self.pallas_ok = False

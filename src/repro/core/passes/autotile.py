@@ -70,11 +70,13 @@ def _search_chunk(block: Block, hw: HardwareConfig, params: Dict, names: List[st
     """Best feasible candidate in one chunk: (cost, global index, tiles)."""
     if macs_exact != ():
         # The exact MAC count (an expensive polyhedron enumeration) is
-        # cached by block identity, which a pickled copy loses — seed the
-        # worker's cache with the parent's precomputed value.
-        from ..cost import _MACS_CACHE
+        # memoized by IR fingerprint — seed the worker's LRU with the
+        # parent's precomputed (key, value) so no worker re-enumerates,
+        # and thread the key so candidates don't re-hash the IR.
+        from ..cost import seed_macs_cache
 
-        _MACS_CACHE[id(block)] = macs_exact
+        seed_macs_cache(*macs_exact)
+        params = dict(params, _macs_key=macs_exact[0])
     best = None
     for j, combo in enumerate(combos):
         tiles = dict(zip(names, combo))
@@ -107,9 +109,10 @@ def _search_parallel(block, hw, params, names, cands, workers):
     clean = {k: v for k, v in params.items() if not k.startswith("_")}
     macs_exact = ()
     if params.get("exact_macs"):
-        from ..cost import count_macs_exact
+        from ..cost import count_macs_exact, macs_cache_key
 
-        macs_exact = count_macs_exact(block)
+        key = params.get("_macs_key") or macs_cache_key(block)
+        macs_exact = (key, count_macs_exact(block, key=key))
     chunk = max(1, -(-len(combos) // (workers * 4)))
     try:
         # forkserver: children fork from a clean single-threaded server
@@ -138,6 +141,11 @@ def _search_parallel(block, hw, params, names, cands, workers):
 
 def choose_tiling(block: Block, hw: HardwareConfig, params: Mapping) -> Tuple[Dict[str, int], TileCost]:
     free = {i.name: i.range for i in block.idxs if not i.is_passthrough()}
+    if params.get("exact_macs") and "_macs_key" not in params:
+        # hash the block once for the whole candidate sweep
+        from ..cost import macs_cache_key
+
+        params = dict(params, _macs_key=macs_cache_key(block))
     search = params.get("search", "pow2")
     names = sorted(free)
     cands = {v: _candidates(free[v], search) for v in names}
@@ -172,6 +180,13 @@ def choose_tiling(block: Block, hw: HardwareConfig, params: Mapping) -> Tuple[Di
 def _coordinate_descent(block, hw, params, free, cands):
     tiles = {v: c[-1] for v, c in cands.items()}
     cost = evaluate_tiling(block, tiles, hw, params)
+    if not cost.feasible:
+        # a feasible anchor is required: one-dimensional moves from an
+        # infeasible all-max start can be uniformly infeasible when the
+        # memory cap needs several dims shrunk at once.  The smallest
+        # candidate per dim is the conservative restart.
+        tiles = {v: c[0] for v, c in cands.items()}
+        cost = evaluate_tiling(block, tiles, hw, params)
     for _ in range(6):
         improved = False
         for v in sorted(free):
@@ -232,6 +247,8 @@ def autotile_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program
                 "bytes_hbm": cost.bytes_hbm, "macs": cost.macs,
                 "mem_bytes": cost.mem_bytes, "n_tiles": cost.n_tiles,
                 "feasible": cost.feasible,
+                "latency_s": cost.latency_s, "plan_bytes": cost.plan_bytes,
+                "pipeline_depth": hw.pipeline_depth,
             })
         if all(tiles.get(v, free[v]) >= free[v] for v in free) and cost.feasible:
             # whole op fits in one tile: keep flat, mark it

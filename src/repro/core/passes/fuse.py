@@ -19,8 +19,11 @@ Every candidate merge is **cost-arbitrated** (`cost.FusionDecision`):
 HBM bytes saved by eliminating the intermediate (one write + one read)
 against HBM bytes added by re-fetching fused inputs per revisiting grid
 tile, subject to the VMEM arena pressure of a canonical tile priced with
-``schedule.arena_bytes`` — the same arithmetic the address assigner
-uses.  Accepted and rejected merges are recorded in the pass trace
+``core/memplan``'s slot model (streamed views double-buffered to the
+hardware's ``pipeline_depth``, reduction-resident views in one slot,
+the output accumulator plus its f32 scratch) — the same arithmetic the
+autotiler's feasibility check and the schedule-time allocator use.
+Accepted and rejected merges are recorded in the pass trace
 (``params["_report"]``), so a compile's fusion decisions are auditable
 and persisted with the compilation cache payload.
 

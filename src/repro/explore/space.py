@@ -13,7 +13,8 @@ Axis paths address the config structurally:
   ``bandwidth``, ``cache_line_elems``), e.g. ``mem.VMEM.size_bytes``;
 * ``stencil.<NAME>.<field>`` — a compute-stencil field, e.g.
   ``stencil.mxu.dims``;
-* ``peak_flops`` / ``ici_link_bw`` — top-level roofline scalars;
+* ``peak_flops`` / ``ici_link_bw`` / ``pipeline_depth`` — top-level
+  roofline/pipeline scalars;
 * ``pipeline``               — a named pass-pipeline variant
   (:data:`PIPELINE_VARIANTS`), e.g. dropping the fusion pass;
 * ``<pass>.<param>``         — a pass parameter via ``with_params``,
@@ -68,7 +69,7 @@ def apply_axis(cfg: HardwareConfig, path: str, value: Any) -> HardwareConfig:
         except KeyError:
             raise KeyError(f"unknown pipeline variant {value!r}; "
                            f"available: {sorted(PIPELINE_VARIANTS)}") from None
-    if path in ("peak_flops", "ici_link_bw"):
+    if path in ("peak_flops", "ici_link_bw", "pipeline_depth"):
         return dataclasses.replace(cfg, **{path: value})
     if len(parts) == 3 and parts[0] == "mem":
         return cfg.with_mem(parts[1], **{parts[2]: value})
@@ -210,9 +211,10 @@ class SearchSpace:
 # --------------------------------------------------------------------------
 def tpu_sweep() -> SearchSpace:
     """Hardware/compiler co-design around the TPU v5e: memory-system
-    alternatives (HBM bandwidth generations, VMEM arena sizes) crossed
-    with pass parameterizations (autotile budget, fusion-grouping
-    preference) and pipeline variants (fusion on/off)."""
+    alternatives (HBM bandwidth generations, VMEM arena sizes, DMA
+    pipeline depth) crossed with pass parameterizations (autotile
+    budget, fusion-grouping preference) and pipeline variants (fusion
+    on/off)."""
     return SearchSpace(
         name="tpu-sweep", base="tpu_v5e",
         axes=(
@@ -220,6 +222,7 @@ def tpu_sweep() -> SearchSpace:
             Axis("mem.HBM.bandwidth", (819e9, 1.2e12, 1.64e12), default=819e9),
             Axis("mem.VMEM.size_bytes",
                  (64 * 2**20, 128 * 2**20, 256 * 2**20), default=128 * 2**20),
+            Axis("pipeline_depth", (2, 1, 3), default=2),
             Axis("autotile.mem_cap_frac", (0.3, 0.45, 0.6, 0.9), default=0.45),
             Axis("fuse.prefer", ("epilogue", "prologue"), default="epilogue"),
         ))

@@ -43,10 +43,12 @@ def build_matmul_kernel(m: int, k: int, n: int, dtype: str = "float32",
         tp.op("O[i, j] += X[i, c] * W[c, j]")
     # the persistent compilation cache replays the tiling choice on warm
     # processes; the lru_cache above only helps within this one
-    prog, _record = compile_cached(tp.build(), get_config("tpu_v5e"))
+    hw = get_config("tpu_v5e")
+    prog, _record = compile_cached(tp.build(), hw)
     blocks = [s for s in prog.entry.stmts if isinstance(s, Block)]
     assert len(blocks) == 1, f"expected one fused block, got {len(blocks)}"
-    fn = lower_op_pallas(blocks[0], interpret=interpret)
+    fn = lower_op_pallas(blocks[0], interpret=interpret,
+                         pipeline_depth=hw.pipeline_depth)
 
     def call(x, w, b=None):
         arrays = {"X": x, "W": w}

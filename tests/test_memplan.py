@@ -1,0 +1,396 @@
+"""Liveness-based VMEM memory planner (core/memplan.py) + the pipelined
+wavefront cost model it feeds (core/cost.py).
+
+The load-bearing property: the interval-graph best-fit allocator never
+hands two views with overlapping live intervals overlapping address
+ranges (hypothesis), while reusing dead views' space.  Plus: slot
+classification (streamed / resident / accumulator), the planner-exact
+autotile feasibility unlock vs the legacy ``*2`` rule, fusion-pressure
+differences, pipelined latency gating by ``pipeline_depth``, wavefront-
+overlap scoring, and the schedule-pass integration (arena tags, slot
+addresses)."""
+import copy
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TileProgram, single_op_program, stripe_jit
+from repro.core.cost import (
+    evaluate_tiling,
+    pipelined_latency,
+    score_pass_trace,
+)
+from repro.core.hwconfig import get_config
+from repro.core.memplan import (
+    ARENA_ALIGN,
+    ViewSpec,
+    allocate,
+    bump_bytes,
+    plan_block,
+    plan_program,
+)
+from repro.core.passes import get_pass
+
+
+# --------------------------------------------------------------------------
+# allocator
+# --------------------------------------------------------------------------
+def _overlap(a, b):
+    return a.view.start <= b.view.end and b.view.start <= a.view.end
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10**9))
+def test_property_allocations_never_overlap_live_intervals(seed):
+    """The acceptance property: concurrently-live views never share
+    bytes; every slot is aligned; the packed peak never exceeds the
+    legacy bump model."""
+    rng = random.Random(seed)
+    views = []
+    for i in range(rng.randint(1, 14)):
+        start = rng.randint(0, 6)
+        views.append(ViewSpec(
+            name=f"v{i}", nbytes=rng.randint(1, 300 * 1024),
+            slots=rng.randint(1, 2), start=start, end=rng.randint(start, 8)))
+    allocs, peak = allocate(views)
+    assert len(allocs) == len(views)
+    for a in allocs:
+        assert a.addr % ARENA_ALIGN == 0
+        assert a.addr + a.nbytes <= peak
+    for i, a in enumerate(allocs):
+        for b in allocs[i + 1:]:
+            if _overlap(a, b):
+                assert a.addr + a.nbytes <= b.addr or b.addr + b.nbytes <= a.addr, \
+                    f"live-overlapping views share bytes: {a} vs {b}"
+    assert peak <= bump_bytes(views)
+
+
+def test_allocator_reuses_dead_views_space():
+    views = [
+        ViewSpec(name="a", nbytes=1024, start=0, end=0),
+        ViewSpec(name="b", nbytes=1024, start=0, end=2),
+        ViewSpec(name="c", nbytes=1024, start=1, end=2),  # reuses a's slot
+    ]
+    allocs, peak = allocate(views)
+    by_name = {a.view.name: a for a in allocs}
+    assert by_name["c"].addr == by_name["a"].addr
+    assert peak == 2 * 1024
+
+
+def test_allocator_best_fit_prefers_smallest_gap():
+    # layout at interval 0 (by size, then name):
+    #   a_rel@0 (4096, dies) | b_keep@4096 | c_rel@4608 (512, dies) | d_keep@5120
+    views = [
+        ViewSpec(name="a_rel", nbytes=4096, start=0, end=0),
+        ViewSpec(name="b_keep", nbytes=512, start=0, end=3),
+        ViewSpec(name="c_rel", nbytes=512, start=0, end=0),
+        ViewSpec(name="d_keep", nbytes=512, start=0, end=3),
+        ViewSpec(name="fill", nbytes=512, start=1, end=1),
+    ]
+    allocs, _ = allocate(views)
+    by_name = {a.view.name: a for a in allocs}
+    assert by_name["b_keep"].addr == 4096 and by_name["c_rel"].addr == 4608
+    # 'fill' lands in the released 512B gap between the keepers, not the
+    # released 4096B region below them
+    assert by_name["fill"].addr == by_name["c_rel"].addr
+
+
+# --------------------------------------------------------------------------
+# plan_block classification
+# --------------------------------------------------------------------------
+def _tiled_matmul_block(m=256, k=256, n=256, tiles=None):
+    from repro.core.tiling import split_block
+
+    prog = single_op_program(
+        "O[i, j] += A[i, c] * B[c, j]",
+        {"A": ((m, k), "float32"), "B": ((k, n), "float32"),
+         "O": ((m, n), "float32")},
+        out="O",
+    )
+    blk = prog.entry.stmts[0]
+    return split_block(blk, tiles or {"i": 128, "c": 128})
+
+
+def test_plan_block_grid_slots_and_scratch():
+    g = _tiled_matmul_block()  # grid over i (output) and c (reduction)
+    plan = plan_block(g, depth=2)
+    assert plan.grid
+    assert set(plan.red_vars) == {"c"} and set(plan.parallel_vars) == {"i"}
+    kinds = {a.view.name: (a.view.kind, a.view.slots) for a in plan.allocs}
+    assert kinds["A"] == ("stream", 2)           # addressed by i and c
+    assert kinds["B"] == ("stream", 2)           # addressed by c
+    assert kinds["O_out"] == ("acc", 1)          # revisited across c
+    assert kinds["O_out.acc"] == ("scratch", 1)  # f32 partial sums
+    assert plan.acc_bytes == 128 * 256 * 4
+    # streamed double-buffering beats blanket double-buffering strictly
+    assert 0 < plan.peak_bytes < plan.bump_bytes
+
+
+def test_plan_block_resident_weight_single_slot():
+    g = _tiled_matmul_block(tiles={"i": 128})  # B is grid-invariant
+    plan = plan_block(g, depth=2)
+    kinds = {a.view.name: (a.view.kind, a.view.slots) for a in plan.allocs}
+    assert kinds["B"] == ("resident", 1)
+    assert kinds["A"] == ("stream", 2)
+
+
+def test_plan_flat_fused_block_liveness_reuse():
+    """A fused flat block's operand views die before the epilogue's
+    views go live — the planner's arena is strictly below the bump
+    model on the same views."""
+    tp = TileProgram("mlp")
+    tp.input("A", (64, 64))
+    tp.input("B", (64, 64))
+    tp.input("b", (64,))
+    tp.temp("T", (64, 64))
+    tp.output("O", (64, 64))
+    tp.op("T[i, j] += A[i, c] * B[c, j]", name="mm")
+    tp.op("O[i, j] = relu(T[i, j] + b[j])", name="bias")
+    prog = tp.build()
+    fused = get_pass("fuse")(prog, get_config("tpu_v5e"), {})
+    blk = [s for s in fused.entry.stmts if hasattr(s, "refs")][0]
+    plan = plan_block(blk, depth=2)
+    assert not plan.grid
+    assert 0 < plan.peak_bytes < plan.bump_bytes
+
+
+def test_plan_program_packs_sequential_levels():
+    blocks = []
+    for name in ("p", "q"):
+        tp = TileProgram(name)
+        tp.input("A", (64, 64))
+        tp.output("O", (64, 64))
+        tp.op("O[i, j] = relu(A[i, j])", name=name)
+        blocks.append(tp.build().entry.stmts[0])
+    seq = plan_program([(blocks[0], 0), (blocks[1], 1)])
+    par = plan_program([(blocks[0], 0), (blocks[1], 0)])
+    per = seq.block_plans[blocks[0].name].peak_bytes
+    assert seq.peak_bytes == per            # level 1 reuses level 0's arena
+    assert par.peak_bytes == 2 * per        # same level: arenas coexist
+    assert seq.bump_bytes == par.bump_bytes > seq.peak_bytes
+
+
+# --------------------------------------------------------------------------
+# pipelined latency + wavefront scoring
+# --------------------------------------------------------------------------
+def test_pipelined_latency_gating():
+    # no double buffering (or a single tile): terms serialize
+    assert pipelined_latency(8.0, 4.0, 10, depth=1) == 12.0
+    assert pipelined_latency(8.0, 4.0, 1, depth=2) == 12.0
+    # steady state hides the smaller term: prologue + (n-1)*max + drain
+    got = pipelined_latency(8.0, 4.0, 10, depth=2)
+    assert got == pytest.approx(0.8 + 9 * 0.8 + 0.4)
+    assert max(8.0, 4.0) < got < 12.0
+
+
+def test_score_pass_trace_overlaps_wavefront_levels():
+    rec_a = {"block": "a", "t_mem": 3.0, "t_compute": 1.0, "latency_s": 3.5}
+    rec_b = {"block": "b", "t_mem": 2.0, "t_compute": 1.0, "latency_s": 2.5}
+    autotile = ("autotile", {}, [rec_a, rec_b])
+    parallel = ("schedule", {}, [
+        {"block": "a.grid", "level": 0, "arena_bytes": 100, "arena_bump_bytes": 300},
+        {"block": "b", "level": 0, "arena_bytes": 200, "arena_bump_bytes": 400},
+    ])
+    serial = ("schedule", {}, [
+        {"block": "a.grid", "level": 0, "arena_bytes": 100, "arena_bump_bytes": 300},
+        {"block": "b", "level": 1, "arena_bytes": 200, "arena_bump_bytes": 400},
+    ])
+    par = score_pass_trace([autotile, parallel])
+    ser = score_pass_trace([autotile, serial])
+    # one level: mem/compute streams overlap -> max(sum mem, sum comp, lat)
+    assert par.latency_s == pytest.approx(5.0)
+    assert par.n_levels == 1
+    # two levels: blocks serialize at their pipelined latencies
+    assert ser.latency_s == pytest.approx(3.5 + 2.5)
+    assert ser.n_levels == 2
+    for sc in (par, ser):
+        assert sc.latency_serial_s == pytest.approx(6.0)
+        assert sc.vmem_bump_peak_bytes == 400
+    # a trace with no schedule levels degrades to the serial sum
+    bare = score_pass_trace([autotile])
+    assert bare.latency_s == pytest.approx(6.0)
+
+
+# --------------------------------------------------------------------------
+# autotile feasibility: the *2 rule vs the planner's exact footprint
+# --------------------------------------------------------------------------
+def test_evaluate_tiling_planner_unlocks_larger_tiles():
+    """A tile whose blanket-double-buffered footprint busts the cap is
+    feasible under the planner (resident weight one slot, revisited
+    output one slot + scratch)."""
+    prog = single_op_program(
+        "O[i, j] += A[i, c] * B[c, j]",
+        {"A": ((1024, 512), "float32"), "B": ((512, 512), "float32"),
+         "O": ((1024, 512), "float32")},
+        out="O",
+    )
+    blk = prog.entry.stmts[0]
+    # cap = 0.45 * 12 MiB = 5.66 MB: between the planner footprint
+    # (2A + B + 2O = 5.24 MB) and the legacy rule (2(A+B+O) = 6.29 MB)
+    hw = get_config("tpu_v5e").with_mem("VMEM", size_bytes=12 * 2**20)
+    tiles = {"i": 512}  # B fully resident, O streamed, A streamed
+    base = {"cost": "roofline", "mem_cap_frac": 0.45}
+    new = evaluate_tiling(blk, tiles, hw, base)
+    old = evaluate_tiling(blk, tiles, hw, dict(base, memplan=False))
+    assert new.feasible and not old.feasible
+    assert "2x tile bytes" in old.why
+    assert new.plan_bytes < 2 * new.mem_bytes
+    # the pipelined per-block latency rides along in both models
+    assert new.latency_s > 0
+
+
+def test_evaluate_tiling_planner_footprint_counts_scratch():
+    """With every view streamed and a gridded reduction, the planner is
+    *not* cheaper than 2x — the f32 scratch is priced honestly."""
+    prog = single_op_program(
+        "O[i, j] += A[i, c] * B[c, j]",
+        {"A": ((256, 256), "bfloat16"), "B": ((256, 256), "bfloat16"),
+         "O": ((256, 256), "bfloat16")},
+        out="O",
+    )
+    blk = prog.entry.stmts[0]
+    hw = get_config("tpu_v5e")
+    c = evaluate_tiling(blk, {"i": 128, "j": 128, "c": 128}, hw,
+                        {"cost": "roofline", "mem_cap_frac": 0.45})
+    # 2xA + 2xB + O + f32 scratch (scratch is 2x a bf16 out tile)
+    assert c.plan_bytes == 2 * (128 * 128 * 2) * 2 + 128 * 128 * 2 + 128 * 128 * 4
+
+
+# --------------------------------------------------------------------------
+# schedule-pass integration
+# --------------------------------------------------------------------------
+def _compile(prog, hw):
+    from repro.core.passes import PassManager
+
+    pm = PassManager(hw)
+    out = pm.run(copy.deepcopy(prog))
+    return out, pm.trace
+
+
+def test_schedule_pass_tags_planner_and_bump_arenas():
+    tp = TileProgram("two")
+    tp.input("A", (256, 256))
+    tp.input("B", (256, 256))
+    tp.temp("T", (256, 256))
+    tp.output("O", (256, 256))
+    tp.op("T[i, j] += A[i, c] * B[c, j]", name="mm")
+    tp.op("O[i, j] = relu(T[i, j])", name="act")
+    opt, trace = _compile(tp.build(), get_config("tpu_v5e"))
+    sched = [r for e in trace if e[0] == "schedule" for r in e[2]]
+    blocks = [r for r in sched if "level" in r]
+    assert blocks and all(r["arena_bytes"] <= r["arena_bump_bytes"] for r in blocks)
+    prog_plan = [r for r in sched if "program_plan" in r]
+    assert prog_plan and prog_plan[0]["program_plan"]["peak_bytes"] > 0
+    tags = {t for s in opt.entry.stmts if hasattr(s, "tags") for t in s.tags}
+    assert any(t.startswith("arena:") for t in tags)
+    assert any(t.startswith("arena_bump:") for t in tags)
+
+
+def test_schedule_pass_assigns_non_overlapping_slot_addresses():
+    prog = single_op_program(
+        "O[i, j] += A[i, c] * B[c, j]",
+        {"A": ((256, 128), "float32"), "B": ((128, 256), "float32"),
+         "O": ((256, 256), "float32")},
+        out="O",
+    )
+    opt, _ = _compile(prog, get_config("tpu_v5e"))
+    top = [s for s in opt.entry.stmts if hasattr(s, "walk")][0]
+    plan = plan_block(top, depth=get_config("tpu_v5e").pipeline_depth)
+    spans = {a.view.name: (a.addr, a.addr + a.nbytes) for a in plan.allocs}
+    names = sorted(spans)
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            sa, sb = spans[a], spans[b]
+            assert sa[1] <= sb[0] or sb[1] <= sa[0]
+    # the planned bases landed on the inner VMEM refinements
+    addrs = [r.location.addr for g in top.walk() if g is not top
+             for r in g.refs
+             if r.location and r.location.unit == "VMEM" and r.location.addr is not None]
+    assert addrs and all(a % ARENA_ALIGN == 0 for a in addrs)
+
+
+def test_legacy_memplan_param_restores_bump_behavior():
+    hw = get_config("tpu_v5e").with_params(**{"schedule.memplan": False})
+    prog = single_op_program(
+        "O[i, j] += A[i, c] * B[c, j]",
+        {"A": ((256, 128), "float32"), "B": ((128, 256), "float32"),
+         "O": ((256, 256), "float32")},
+        out="O",
+    )
+    opt, trace = _compile(prog, hw)
+    sched = [r for e in trace if e[0] == "schedule" for r in e[2]]
+    assert all("arena_bump_bytes" not in r for r in sched)
+    tags = {t for s in opt.entry.stmts if hasattr(s, "walk")
+            for b in s.walk() for t in b.tags}
+    assert not any(t.startswith("arena_bump:") for t in tags)
+
+
+# --------------------------------------------------------------------------
+# end-to-end capacity unlock (the memplan bench, reduced)
+# --------------------------------------------------------------------------
+def _chain_prog(m=256, n=4096, n2=32):
+    tp = TileProgram("memplan_chain")
+    tp.input("X", (m, n))
+    tp.input("W2", (n, n2))
+    tp.temp("Y1", (m, n))
+    tp.temp("Y2", (m, n))
+    tp.temp("X2", (m, n))
+    tp.output("O", (m, n2))
+    tp.op("Y1[i, j] = relu(X[i, j])", name="pre1")
+    tp.op("Y2[i, j] = square(Y1[i, j])", name="pre2")
+    tp.op("X2[i, j] = abs(Y2[i, j])", name="pre3")
+    tp.op("O[i, j2] += X2[i, j] * W2[j, j2]", name="mm")
+    return tp.build()
+
+
+def test_planner_unlocks_fusion_and_larger_tiles_end_to_end():
+    """On a VMEM-tight config whose cap sits between the planner's exact
+    pressure and the legacy 2x pressure: the planner fuses the whole
+    elementwise chain into the matmul kernel (1 group vs 4) and the
+    legacy model cannot afford the planner's tile."""
+    hw = (get_config("tpu_v5e").with_mem("VMEM", size_bytes=16 * 2**20)
+          .with_params(**{"autotile.mem_cap_frac": 0.29,
+                          "fuse.mem_cap_frac": 0.29}))
+    legacy = hw.with_params(**{"fuse.memplan": False, "autotile.memplan": False,
+                               "schedule.memplan": False})
+    cp = stripe_jit(_chain_prog(), hw, backend="jnp", use_disk=False)
+    cl = stripe_jit(_chain_prog(), legacy, backend="jnp", use_disk=False)
+    assert cp.record.groups == [["pre1", "pre2", "pre3", "mm"]]
+    assert cl.record.n_kernels == 4
+    rejected = [d for d in cl.record.fusion_decisions() if not d["accepted"]]
+    assert rejected and "arena" in rejected[0]["reason"]
+
+    def mm_rec(rec):
+        return next(r for e in rec.pass_trace if e[0] == "autotile"
+                    for r in e[2] if r["block"] == "mm")
+
+    mm_p, mm_l = mm_rec(cp.record), mm_rec(cl.record)
+    cap = int(16 * 2**20 * 0.29)
+    assert mm_p["mem_bytes"] > mm_l["mem_bytes"]          # larger tile
+    assert 2 * mm_p["mem_bytes"] > cap >= mm_p["plan_bytes"]  # old-rule-infeasible
+    # whole-workload predicted latency: the fused compile wins
+    lat_p = score_pass_trace(cp.record.pass_trace).latency_s
+    lat_l = score_pass_trace(cl.record.pass_trace).latency_s
+    assert lat_p < lat_l
+    # both compiles stay semantically correct
+    rng = np.random.RandomState(0)
+    ins = {"X": rng.randn(256, 4096).astype(np.float32),
+           "W2": rng.randn(4096, 32).astype(np.float32)}
+    want = np.abs(np.square(np.maximum(ins["X"], 0.0))) @ ins["W2"]
+    np.testing.assert_allclose(np.asarray(cp(ins)["O"]), want, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cl(ins)["O"]), want, rtol=1e-4, atol=1e-3)
+
+
+def test_pipeline_depth_in_fingerprint_and_sweepable():
+    import dataclasses
+
+    from repro.explore import apply_axis
+
+    hw = get_config("tpu_v5e")
+    assert hw.pipeline_depth == 2
+    deeper = apply_axis(hw, "pipeline_depth", 3)
+    assert deeper.pipeline_depth == 3
+    assert deeper.fingerprint() != hw.fingerprint()
+    assert dataclasses.replace(hw, pipeline_depth=2).fingerprint() == hw.fingerprint()

@@ -150,6 +150,30 @@ def test_fig4_autotile_selects_feasible_minimum():
     assert cost.cost <= ref.cost + 1e-12
 
 
+def test_choose_tiling_coordinate_descent_fallback():
+    """When the candidate cross-product exceeds ``max_combos`` the search
+    falls back to greedy per-dimension refinement — the result must be
+    feasible under the memory cap and deterministic across calls, and
+    must match the fallback invoked directly."""
+    from repro.core.passes.autotile import _candidates, _coordinate_descent
+
+    prog = _matmul_prog(64, 32, 48)
+    blk = prog.entry.stmts[0]
+    params = {"cost": "cache_lines", "search": "exhaustive",
+              "mem_cap_elems": 512, "max_combos": 50}
+    n_combos = 64 * 32 * 48  # forces the fallback (> max_combos)
+    assert n_combos > params["max_combos"]
+    tiles, cost = choose_tiling(blk, PAPER_FIG4, params)
+    assert cost.feasible
+    assert cost.mem_elems <= 512
+    tiles2, cost2 = choose_tiling(blk, PAPER_FIG4, params)
+    assert tiles == tiles2 and cost.cost == cost2.cost
+    free = {i.name: i.range for i in blk.idxs if not i.is_passthrough()}
+    cands = {v: _candidates(free[v], "exhaustive") for v in free}
+    t3, c3 = _coordinate_descent(blk, PAPER_FIG4, params, free, cands)
+    assert t3 == tiles and c3.cost == cost.cost
+
+
 def test_lines_for_view_alignment():
     from repro.core.ir import RefDir, Refinement
     from repro.core.affine import aff
