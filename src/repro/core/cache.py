@@ -33,7 +33,10 @@ from typing import Any, Callable, Dict, Optional
 # v3: pass traces carry the memory-planner arenas (arena/arena_bump,
 # wavefront levels) and pipelined per-block latencies — pre-planner
 # payloads would score on the legacy model, so they are invalidated.
-CACHE_VERSION = 3
+# v4: the roofline model charges halo materialization/refetch traffic
+# (TileCost.halo_bytes), so tilings chosen for halo-windowed blocks
+# under v3 can differ; payloads also carry per-unit hybrid backends.
+CACHE_VERSION = 4
 
 ENV_CACHE_DIR = "STRIPE_CACHE_DIR"
 ENV_CACHE_DISABLE = "STRIPE_CACHE_DISABLE"

@@ -37,6 +37,9 @@ class TileCost:
     why: str = ""
     latency_s: float = 0.0  # pipelined per-block latency (pipelined_latency)
     plan_bytes: int = 0     # planner-exact VMEM footprint of one tile
+    halo_bytes: float = 0.0  # HBM traffic added by halo windows (overlap
+    #                          re-fetch + one-time materialization of the
+    #                          gathered operand the Pallas lowerer builds)
 
 
 def pipelined_latency(t_mem: float, t_compute: float, n_tiles: int,
@@ -274,6 +277,7 @@ def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, 
         total_steps *= steps[v]
 
     bytes_hbm = 0.0
+    halo_bytes = 0.0
     for r, shape, _uses, _al in views:
         elems = 1
         for s in shape:
@@ -289,6 +293,24 @@ def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, 
         fetches = max(total_steps // max(reuse, 1), 1)
         factor = 2 if r.dir == RefDir.INOUT else 1
         bytes_hbm += fetches * elems * dtype_bytes(r.dtype) * factor
+        # Halo windows (tile view extent > the grid step along a tiled
+        # dim — the conv overlap): the Pallas lowerer materializes the
+        # overlapping tiles once per input (write the gathered array,
+        # read the source), so charge that one-time traffic on top of the
+        # per-step fetches, which already include the margin.  Larger
+        # tiles along the halo dims shrink both terms — exactly the
+        # amortization the autotiler should buy.
+        core = 1
+        for e, ext in zip(r.offsets, shape):
+            step = sum(abs(c) * eff[n] for n, c in e.terms if n in steps)
+            core *= step if 0 < step < ext else ext
+        if elems > core:
+            unique = 1
+            for v in grid_dims:
+                if v in ref_vars:
+                    unique *= steps[v]
+            halo_bytes += 2.0 * unique * elems * dtype_bytes(r.dtype)
+    bytes_hbm += halo_bytes
     t_mem = bytes_hbm / hw.mem_units[0].bandwidth
 
     # compute term with stencil-padding utilization
@@ -311,7 +333,7 @@ def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, 
     return TileCost(cost=cost, macs=macs, bytes_hbm=bytes_hbm, t_mem=t_mem,
                     t_compute=t_compute, mem_elems=mem_elems, mem_bytes=mem_bytes,
                     n_tiles=n_tiles, feasible=feasible, why=why,
-                    plan_bytes=plan_bytes,
+                    plan_bytes=plan_bytes, halo_bytes=halo_bytes,
                     latency_s=pipelined_latency(t_mem, t_compute, n_tiles, depth))
 
 

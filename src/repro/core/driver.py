@@ -52,13 +52,20 @@ class CompileRecord:
     fallback_reason: str = ""
     # Per-group lowering: the semantic op-block names each fusion group
     # absorbed, and the kernel count — for the pallas backend this is the
-    # actual pallas_call count per invocation; for jnp it is the fusion-
-    # group (compile-unit) count, though the driver still wraps the whole
-    # program in one outer jax.jit (use lower_program_jnp(jit_scope=
-    # "group") for per-group dispatch, as the fusion bench does); the
-    # reference interpreter launches no kernels and reports 0.
+    # actual pallas_call count per invocation plus one dispatch per
+    # jnp-fallback unit; for jnp it is the fusion-group (compile-unit)
+    # count, though the driver still wraps the whole program in one outer
+    # jax.jit (use lower_program_jnp(jit_scope="group") for per-group
+    # dispatch, as the fusion bench does); the reference interpreter
+    # launches no kernels and reports 0.
     n_kernels: int = 0
     groups: List[List[str]] = dataclasses.field(default_factory=list)
+    # Per-block hybrid lowering (pallas backend): which backend each
+    # lowering unit (fusion group / boundary-piece set, keyed by its
+    # "+"-joined member names) actually took, and why the jnp units fell
+    # back.  Empty for whole-program backends.
+    block_backends: Dict[str, str] = dataclasses.field(default_factory=dict)
+    block_fallbacks: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     def fusion_decisions(self) -> List[Dict]:
         """Accepted/rejected merges recorded by the fusion pass."""
@@ -66,6 +73,15 @@ class CompileRecord:
             if entry[0] == "fuse" and len(entry) > 2:
                 return list(entry[2])
         return []
+
+    def fallback_reasons(self) -> Dict[str, str]:
+        """Every recorded Pallas fallback: per-unit reasons from the
+        hybrid lowering, plus the whole-program reason (key
+        ``"<program>"``) when the backend fell back wholesale."""
+        out = dict(self.block_fallbacks)
+        if self.fallback_reason:
+            out["<program>"] = self.fallback_reason
+        return out
 
 
 class CompiledProgram:
@@ -145,34 +161,49 @@ def _program_groups(opt: Program) -> List[List[str]]:
 
 def _lower(opt: Program, backend: str, interpret: bool, jit: bool,
            hw: Optional[HardwareConfig] = None
-           ) -> Tuple[Callable, str, str, int, List[List[str]]]:
+           ) -> Tuple[Callable, str, str, int, List[List[str]], Dict[str, str], Dict[str, str]]:
     """Returns (fn(arrays)->outputs dict, backend used, fallback reason,
-    kernels launched per call, fusion groups)."""
+    kernels launched per call, fusion groups, per-unit backends, per-unit
+    fallback reasons)."""
     semantic = opt.source or opt
     groups = _program_groups(opt)
     if backend == "reference":
         # the interpreter launches no kernels and ignores grouping
         fn = lambda arrays: execute_reference(semantic, arrays)  # noqa: E731
-        return fn, backend, "", 0, groups
+        return fn, backend, "", 0, groups, {}, {}
+    fallback = ""
+    blk_backends: Dict[str, str] = {}
+    blk_falls: Dict[str, str] = {}
     if backend == "pallas":
-        from .lower_pallas import UnsupportedPallas, lower_program_pallas
+        from .lower_pallas import UnsupportedPallas, lower_program_hybrid
 
         try:
-            fn = lower_program_pallas(
+            # per-block hybrid: each fusion group / boundary-piece unit
+            # lowers to Pallas or falls back to jnp independently
+            fn = lower_program_hybrid(
                 opt, interpret=interpret,
                 pipeline_depth=hw.pipeline_depth if hw is not None else 2)
-            return fn, backend, "", fn.n_kernels, groups
         except UnsupportedPallas as e:
             backend, fallback = "jnp", str(e)
-    else:
-        fallback = ""
+        else:
+            if fn.n_pallas > 0:
+                return (fn, "pallas", "", fn.n_kernels, groups,
+                        dict(fn.block_backends), dict(fn.block_reasons))
+            # every unit fell back: take the whole-program jnp path below
+            # (one outer jax.jit beats N independently-jitted dispatches),
+            # keeping the per-unit reasons on the record
+            backend = "jnp"
+            fallback = "; ".join(f"{k}: {v}"
+                                 for k, v in fn.block_reasons.items())
+            blk_backends = dict(fn.block_backends)
+            blk_falls = dict(fn.block_reasons)
     fn = lower_program_jnp(semantic, groups=groups)
     n_kernels = fn.n_kernels
     if jit:
         import jax
 
         fn = jax.jit(fn)
-    return fn, backend, fallback, n_kernels, groups
+    return fn, backend, fallback, n_kernels, groups, blk_backends, blk_falls
 
 
 # --------------------------------------------------------------------------
@@ -265,13 +296,15 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
     oracle = TilingOracle(known=(payload or {}).get("tilings"))
     pm = PassManager(hw, oracle=oracle, autotune_workers=workers)
     opt = pm.run(copy.deepcopy(prog))
-    fn, used_backend, fallback, n_kernels, groups = _lower(opt, backend, interpret, jit, hw)
+    fn, used_backend, fallback, n_kernels, groups, blk_backends, blk_falls = \
+        _lower(opt, backend, interpret, jit, hw)
     record = CompileRecord(
         key=key, backend=used_backend, hw_name=hw.name,
         cache_hit=False, disk_hit=payload is not None,
         compile_time_s=time.perf_counter() - t0,
         tilings=dict(oracle.chosen), pass_trace=list(pm.trace),
         fallback_reason=fallback, n_kernels=n_kernels, groups=groups,
+        block_backends=blk_backends, block_fallbacks=blk_falls,
     )
     compiled = CompiledProgram(opt, fn, hw, record)
     cache.put_memory(key, compiled)
@@ -281,5 +314,6 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
             "hw": hw.name, "backend": used_backend,
             "compile_time_s": record.compile_time_s,
             "n_kernels": n_kernels, "groups": groups,
+            "block_backends": blk_backends, "block_fallbacks": blk_falls,
         })
     return compiled

@@ -393,6 +393,101 @@ class _LazyZeros(dict):
         return v
 
 
+def _group_executor(prog: Program, plans: Mapping[str, Tuple[Block, FlatOp, Callable]],
+                    g: Sequence[str], internal: frozenset) -> Callable:
+    """One fusion group as an executable unit: fn(arrays) -> updates dict.
+    Group-internal intermediates never leave the unit."""
+
+    def group_fn(arrays, g=tuple(g), internal=frozenset(internal)):
+        local = _LazyZeros(arrays, prog.buffers)
+        updates: Dict[str, jnp.ndarray] = {}
+        for name in g:
+            blk, op, fn = plans[name]
+            val = fn(local)
+            if op.agg != "assign" and len(g) > 1 and jax.default_backend() == "cpu":
+                # Keep XLA CPU's library gemm: loop-fusing an expensive
+                # elementwise epilogue (erf/gelu) into a dot consumer
+                # drops the contraction off the fast gemm runtime.  The
+                # barrier pins the dot, while the group's elementwise
+                # members still fuse with each other.
+                val = jax.lax.optimization_barrier(val)
+            buf = op.out_ref.from_buf
+            full = local.get(buf)
+            decl_shape = prog.buffers[buf].shape
+            region = _out_region(op, decl_shape)
+            out_shape_full = tuple(hi - lo for lo, hi in region)
+            val = val.reshape(out_shape_full)
+            if out_shape_full == decl_shape:
+                if op.agg != "assign" and full is not None:
+                    # a previous writer's contribution is in the buffer:
+                    # aggregate with it (each lowering computes its own
+                    # complete reduction from the identity, so combining
+                    # results with the agg op matches the reference's
+                    # single accumulating buffer)
+                    new = _AGG_JNP[op.agg](full, val.astype(full.dtype))
+                else:
+                    new = val
+            else:
+                if full is None:  # partially-written buffer: zero base
+                    full = jnp.zeros(decl_shape,
+                                     np.dtype(prog.buffers[buf].dtype))
+                starts = tuple(lo for lo, _ in region)
+                if op.agg != "assign":
+                    cur = jax.lax.dynamic_slice(full, starts, out_shape_full)
+                    val = _AGG_JNP[op.agg](cur, val.astype(full.dtype))
+                new = jax.lax.dynamic_update_slice(
+                    full, val.astype(full.dtype), starts)
+            local[buf] = new
+            if buf not in internal:
+                updates[buf] = new
+        return updates
+
+    return group_fn
+
+
+def _group_needed(plans, g: Sequence[str]) -> frozenset:
+    """Buffers a group's jit signature must cover: everything it reads or
+    writes — passing the whole program environment would add O(total
+    buffers) pytree flattening per dispatch."""
+    needed = set()
+    for n in g:
+        blk, op, _fn = plans[n]
+        needed.add(op.out_ref.from_buf)
+        for r in blk.refs:
+            if r.dir in (RefDir.IN, RefDir.INOUT):
+                needed.add(r.from_buf)
+    return frozenset(needed)
+
+
+def lower_group_jnp(prog: Program, names: Sequence[str],
+                    jit_scope: Optional[str] = "group") -> Callable:
+    """Lower the named semantic (frontend-shaped) op blocks as ONE jnp
+    compile unit: fn(arrays) -> {buffer: full array} updates.
+
+    This is the per-unit fallback of the hybrid Pallas composer
+    (``lower_pallas.lower_program_hybrid``): when one fusion group cannot
+    lower to a kernel, only its member ops take the jnp path, jitted as a
+    single dispatch, while the rest of the program keeps its kernels."""
+    plans: Dict[str, Tuple[Block, FlatOp, Callable]] = {}
+    want = set(names)
+    for s in prog.entry.stmts:
+        if isinstance(s, Block) and s.name in want:
+            plans[s.name] = (s, analyze_flat(s), lower_block_jnp(s))
+    missing = [n for n in names if n not in plans]
+    if missing:
+        raise KeyError(f"op blocks {missing} not in program")
+    fn = _group_executor(prog, plans, list(names), frozenset())
+    if jit_scope in ("op", "group"):
+        fn = jax.jit(fn)
+    needed = _group_needed(plans, list(names))
+
+    def run(arrays: Mapping[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        return fn({b: arrays[b] for b in needed if b in arrays})
+
+    run.needed = needed
+    return run
+
+
 def lower_program_jnp(prog: Program, groups: Optional[List[List[str]]] = None,
                       jit_scope: Optional[str] = None
                       ) -> Callable[[Mapping[str, jnp.ndarray]], Dict[str, jnp.ndarray]]:
@@ -436,47 +531,9 @@ def lower_program_jnp(prog: Program, groups: Optional[List[List[str]]] = None,
                     and readers.get(b, set()) <= set(g)
                     and b != plans[g[-1]][1].out_ref.from_buf}
         elided |= internal
-        # the group's jit signature covers only what it touches — passing
-        # the whole program environment would add O(total buffers) pytree
-        # flattening per dispatch
-        needed = set(written)
-        for n in g:
-            for r in plans[n][0].refs:
-                if r.dir in (RefDir.IN, RefDir.INOUT):
-                    needed.add(r.from_buf)
-
-        def group_fn(arrays, g=tuple(g), internal=frozenset(internal)):
-            local = _LazyZeros(arrays, prog.buffers)
-            updates: Dict[str, jnp.ndarray] = {}
-            for name in g:
-                blk, op, fn = plans[name]
-                val = fn(local)
-                if op.agg != "assign" and len(g) > 1 and jax.default_backend() == "cpu":
-                    # Keep XLA CPU's library gemm: loop-fusing an expensive
-                    # elementwise epilogue (erf/gelu) into a dot consumer
-                    # drops the contraction off the fast gemm runtime.  The
-                    # barrier pins the dot, while the group's elementwise
-                    # members still fuse with each other.
-                    val = jax.lax.optimization_barrier(val)
-                buf = op.out_ref.from_buf
-                full = local.get(buf)
-                decl_shape = prog.buffers[buf].shape
-                region = _out_region(op, decl_shape)
-                out_shape_full = tuple(hi - lo for lo, hi in region)
-                val = val.reshape(out_shape_full)
-                if out_shape_full == decl_shape:
-                    new = val
-                else:
-                    if full is None:  # partially-written buffer: zero base
-                        full = jnp.zeros(decl_shape,
-                                         np.dtype(prog.buffers[buf].dtype))
-                    new = jax.lax.dynamic_update_slice(
-                        full, val.astype(full.dtype), tuple(lo for lo, _ in region))
-                local[buf] = new
-                if buf not in internal:
-                    updates[buf] = new
-            return updates
-
+        # the group's jit signature covers only what it touches
+        needed = _group_needed(plans, g) | set(written)
+        group_fn = _group_executor(prog, plans, g, frozenset(internal))
         if jit_scope in ("op", "group"):
             group_fn = jax.jit(group_fn)
         group_fns.append((group_fn, frozenset(needed)))

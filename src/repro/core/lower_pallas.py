@@ -8,13 +8,16 @@ declarative BlockSpec (block shape + index_map); the optimization passes
 
 * the grid = the outer ("grid") block's iteration space, ordered so
   reduction indices vary fastest (output block revisiting => VMEM-resident
-  accumulation in a float32 scratch); parallel output dimensions are
-  declared via ``dimension_semantics`` so Mosaic may reorder/parallelize
+  accumulation in an accumulator-dtype scratch); parallel output dimensions
+  are declared via ``dimension_semantics`` so Mosaic may reorder/parallelize
   them;
-* each refinement of the grid block becomes one BlockSpec: its view shape
-  is the block shape and its per-dimension affine offsets give the
-  index_map (offsets must step in whole blocks — halo views fall back to
-  the jnp backend);
+* each refinement of the grid block becomes one BlockSpec: a view whose
+  per-dimension offsets step in whole blocks indexes the operand directly;
+  a **halo window** (offset step < block dim, or a non-zero base — the
+  conv views of paper Fig. 5b) is emitted over a *materialized* operand:
+  the overlapping tiles are gathered once per input (pad + strided gather,
+  halo rows duplicated by the margin/step ratio) and indexed with an
+  aligned BlockSpec over the gathered array;
 * a whole **fusion group** (fuse.py) executes inside a single
   ``pallas_call`` as a tile-compute graph: elementwise *prologue* DAGs
   transform the input tiles, the MXU contraction runs via
@@ -23,18 +26,30 @@ declarative BlockSpec (block shape + index_map); the optimization passes
   chains, diamond joins — second elementwise inputs become extra
   BlockSpecs) is applied when the final reduction step completes
   (``pl.when``);
-* plain elementwise blocks lower to a map kernel (no scratch).
+* plain elementwise blocks lower to a map kernel (no scratch);
+* **constraint-carrying blocks** (conv halos, boundary remainders from
+  non-dividing tiles) take the *windowed* path: window vars (e.g. the
+  3x3 filter taps) are enumerated as unrolled kernel steps, each step
+  contracts a shifted slice of the input tile, and the block's
+  constraints become masks over the output tile (+ ``pl.program_id`` for
+  grid-var terms) — a **masked store** writes the aggregation identity at
+  constrained-out points.  Blocks the ``boundary`` pass proved
+  constraint-free (tag ``interior``) skip the masks and lower densely.
 
-``lower_program_pallas`` lowers every op block / fusion group of a
-program to one kernel each and composes them; any unsupported block
-raises ``UnsupportedPallas`` and the driver falls back to the jnp
-backend, recording the reason.
+``lower_program_hybrid`` lowers every op block / fusion group to Pallas
+**independently**: a unit that cannot lower falls back to the jnp backend
+for just that unit (``lower_jnp.lower_group_jnp`` on its semantic member
+blocks), and units are composed in wavefront order.  One bad block no
+longer costs the whole program its kernels.  ``lower_program_pallas``
+keeps the strict contract (any unsupported block raises
+``UnsupportedPallas``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, List, Mapping, Optional, Tuple
+import itertools
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,41 +58,97 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from . import memplan
-from .ir import Block, Constant, Intrinsic, Load, Program, Refinement, RefDir, Store
-from .lower_jnp import _J_BINARY, _J_UNARY
+from .ir import (Block, Constant, Intrinsic, Load, Program, Refinement,
+                 RefDir, Store, TensorDecl)
+from .lower_jnp import _J_BINARY, _J_UNARY, _acc_dtype
+
+MAX_WINDOW_STEPS = 512           # unrolled kernel steps per grid point
+MAX_HALO_BYTES = 256 * 2**20     # materialized (gathered) operand budget
 
 
 class UnsupportedPallas(Exception):
     pass
 
 
+class _ProgramFallback(UnsupportedPallas):
+    """A structural hazard no per-unit fallback can fix (e.g. two units
+    accumulating into one buffer — composition by region placement would
+    silently drop contributions, and the per-group jnp executor would
+    clobber them the same way).  Propagates out of the hybrid composer so
+    the driver falls back wholesale."""
+
+
 # --------------------------------------------------------------------------
 # Pattern extraction
 # --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DimSpec:
+    """One dimension of a grid-block refinement: ``base + step*var`` start,
+    ``size`` extent.  ``step < size`` (or ``base != 0``) is a halo window."""
+
+    var: Optional[str]
+    step: int
+    base: int
+    size: int
+
+    @property
+    def is_halo(self) -> bool:
+        if self.var is None:
+            return self.base != 0
+        return self.step != self.size or self.base != 0
+
+
 @dataclasses.dataclass
 class GridRef:
     ref: Refinement
     block_shape: Tuple[int, ...]
     dim_vars: Tuple[Optional[str], ...]  # grid var addressing each dim
+    dims: Tuple[DimSpec, ...] = ()
+
+    @property
+    def base(self) -> Tuple[int, ...]:
+        return tuple(d.base for d in self.dims)
+
+    @property
+    def halo(self) -> bool:
+        return any(d.is_halo for d in self.dims)
 
 
-def _grid_ref(ref: Refinement, grid_ranges: Mapping[str, int]) -> GridRef:
+def _grid_ref(ref: Refinement, grid_ranges: Mapping[str, int],
+              allow_base: bool = False, allow_halo: bool = False) -> GridRef:
+    """Parse a grid-block refinement into per-dim (var, step, base, size).
+
+    Default (strict) mode accepts only block-aligned views (step == size,
+    base == 0) — the shape a plain BlockSpec can index.  ``allow_base``
+    admits a constant base (the composer places the kernel's output region
+    into the buffer); ``allow_halo`` admits overlapping windows (emitted
+    over a materialized operand by the windowed path)."""
     dim_vars: List[Optional[str]] = []
+    dims: List[DimSpec] = []
     for e, size in zip(ref.offsets, ref.shape):
         if e.is_const():
-            if e.const != 0:
+            if e.const != 0 and not (allow_base or allow_halo):
                 raise UnsupportedPallas(f"non-zero const offset {e}")
             dim_vars.append(None)
-        elif len(e.terms) == 1 and e.const == 0:
+            dims.append(DimSpec(None, 0, e.const, size))
+        elif len(e.terms) == 1:
             (v, c) = e.terms[0]
             if v not in grid_ranges:
                 raise UnsupportedPallas(f"offset var {v} is not a grid index")
-            if c != size:
-                raise UnsupportedPallas(f"halo view: offset step {c} != block dim {size}")
+            if c <= 0:
+                raise UnsupportedPallas(f"non-positive offset step in {e}")
+            if not allow_halo:
+                if c != size:
+                    raise UnsupportedPallas(
+                        f"halo view: offset step {c} != block dim {size}")
+                if e.const != 0 and not allow_base:
+                    raise UnsupportedPallas(f"offset base {e.const} in {e}")
             dim_vars.append(v)
+            dims.append(DimSpec(v, c, e.const, size))
         else:
             raise UnsupportedPallas(f"unsupported offset {e}")
-    return GridRef(ref=ref, block_shape=tuple(ref.shape), dim_vars=tuple(dim_vars))
+    return GridRef(ref=ref, block_shape=tuple(ref.shape),
+                   dim_vars=tuple(dim_vars), dims=tuple(dims))
 
 
 @dataclasses.dataclass
@@ -127,11 +198,12 @@ def _leaf_root(stmts) -> _TNode:
     return root
 
 
-def _split_contraction(root: _TNode, sig_of: Mapping[str, Tuple]) -> Tuple[_TNode, _TNode, float]:
-    """Split the stored DAG into (lhs, rhs, scale): top-level ``mul``
-    factors are grouped by the index pattern of their loads, so an
-    elementwise prologue (e.g. ``gelu(A[i,c]) * B[c,j]``) stays attached
-    to its operand side."""
+def _split_sides(root: _TNode, sig_of: Mapping[str, Tuple]
+                 ) -> Tuple[List[_TNode], float]:
+    """Split the stored DAG into operand sides + a constant scale:
+    top-level ``mul`` factors are grouped by the index pattern of their
+    loads, so an elementwise prologue (e.g. ``gelu(A[i,c]) * B[c,j]``)
+    stays attached to its operand side.  Returns 1 or 2 sides."""
     factors: List[_TNode] = []
     scale = 1.0
     stack = [root]
@@ -158,8 +230,8 @@ def _split_contraction(root: _TNode, sig_of: Mapping[str, Tuple]) -> Tuple[_TNod
             groups[sig] = []
             order.append(sig)
         groups[sig].append(n)
-    if len(order) != 2:
-        raise UnsupportedPallas(f"{len(order)} distinct operand groups (need 2)")
+    if not 1 <= len(order) <= 2:
+        raise UnsupportedPallas(f"{len(order)} distinct operand groups (need 1 or 2)")
 
     def fold(ns: List[_TNode]) -> _TNode:
         out = ns[0]
@@ -167,7 +239,14 @@ def _split_contraction(root: _TNode, sig_of: Mapping[str, Tuple]) -> Tuple[_TNod
             out = _TNode("op", op="mul", args=(out, n))
         return out
 
-    return fold(groups[order[0]]), fold(groups[order[1]]), scale
+    return [fold(groups[s]) for s in order], scale
+
+
+def _split_contraction(root: _TNode, sig_of: Mapping[str, Tuple]) -> Tuple[_TNode, _TNode, float]:
+    sides, scale = _split_sides(root, sig_of)
+    if len(sides) != 2:
+        raise UnsupportedPallas(f"{len(sides)} distinct operand groups (need 2)")
+    return sides[0], sides[1], scale
 
 
 @dataclasses.dataclass
@@ -208,6 +287,18 @@ def _leaf_of(block: Block) -> Block:
         cur = subs[0]
 
 
+def _is_constrained(block: Block) -> bool:
+    """Does any block of this tree carry constraints?  The emitter trusts
+    the passes' proofs instead of re-deriving them: ``boundary`` tags the
+    pieces whose constraints ``prune_constraints`` fully discharged with
+    ``interior`` (the whole tree is clean — skip the walk), and
+    ``stencil`` tags the tiles whose stencil fit it established on an
+    unconstrained body with ``dense`` (skip that block's check)."""
+    if "interior" in block.tags:
+        return False
+    return any(b.constraints for b in block.walk() if "dense" not in b.tags)
+
+
 def _check_no_constraints(block: Block) -> None:
     for b in block.walk():
         if b.constraints:
@@ -231,7 +322,12 @@ def _ensure_grid(outer: Block) -> Block:
     tiles = {v: free[v] for v in out_vars}
     if not tiles:
         raise UnsupportedPallas("no output indices to grid over")
-    return split_block(outer, tiles, name_suffix="g", full_tiles=True)
+    grid = split_block(outer, tiles, name_suffix="g", full_tiles=True)
+    # the split is a pure canonicalization: proofs about the flat block
+    # (boundary's interior tag) hold for its grid form
+    if "interior" in outer.tags:
+        grid.add_tag("interior")
+    return grid
 
 
 def _collect(outer: Block):
@@ -246,7 +342,7 @@ def _collect(outer: Block):
         elif r.dir in (RefDir.OUT, RefDir.INOUT):
             if out is not None:
                 raise UnsupportedPallas("multiple outputs")
-            out = _grid_ref(r, grid_ranges)
+            out = _grid_ref(r, grid_ranges, allow_base=True)
         elif r.dir == RefDir.NONE:
             local_alloc[r.into] = r
     if out is None:
@@ -290,6 +386,10 @@ def _collect(outer: Block):
 
 def extract_contraction(outer: Block) -> ContractionPlan:
     grid_ranges, ins, out, local_alloc, leaf_stmts, epilogue = _collect(outer)
+    if (out.ref.agg or "assign") not in ("add", "assign"):
+        # dot_general + the scratch accumulation only realize a SUM
+        raise UnsupportedPallas(
+            f"contraction aggregates with '{out.ref.agg}' (only add)")
     out_vars = {v for v in out.dim_vars if v}
     red_vars = [v for v in grid_ranges if v not in out_vars]
     grid_order = [v for v in grid_ranges if v in out_vars] + red_vars
@@ -374,6 +474,158 @@ def extract_elementwise(outer: Block) -> ElementwisePlan:
 
 
 # --------------------------------------------------------------------------
+# Windowed (halo / masked) extraction
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class WindowedPlan:
+    """A constraint- or halo-carrying block as the windowed kernel sees it:
+    grid refs (halo views allowed), the tile-level addressing of each
+    input, enumerated window vars, and the constraint exprs that become
+    masks over the output tile."""
+
+    grid_order: List[str]
+    grid_sizes: Dict[str, int]
+    in_refs: List[GridRef]
+    out_ref: GridRef
+    red_vars: List[str]                      # grid vars revisiting the output
+    tile_ranges: Dict[str, int]
+    out_axis_vars: Tuple[Optional[str], ...]  # tile var per output dim
+    inner_offsets: Dict[str, Tuple]          # ref.into -> tile-level offsets
+    window_vars: List[str]
+    agg: str                                 # "add" | "assign"
+    sides: Optional[List[_TNode]]            # contraction sides (agg=add)
+    root: Optional[_TNode]                   # full DAG (agg=assign)
+    scale: float
+    constraint_exprs: List                   # affine exprs, each ">= 0"
+
+
+def extract_windowed(outer: Block) -> WindowedPlan:
+    grid_ranges = {i.name: i.range for i in outer.idxs if not i.is_passthrough()}
+    subs = outer.sub_blocks()
+    if len(subs) != 1:
+        raise UnsupportedPallas("windowed path needs exactly one tile block")
+    if any(not isinstance(s, Block) for s in outer.stmts):
+        raise UnsupportedPallas("windowed path does not support fused epilogues")
+    tile = subs[0]
+    if tile.sub_blocks():
+        raise UnsupportedPallas("windowed path needs a flat tile block")
+
+    ins: List[GridRef] = []
+    out: Optional[GridRef] = None
+    for r in outer.refs:
+        if r.dir == RefDir.IN:
+            ins.append(_grid_ref(r, grid_ranges, allow_halo=True))
+        elif r.dir in (RefDir.OUT, RefDir.INOUT):
+            if out is not None:
+                raise UnsupportedPallas("multiple outputs")
+            out = _grid_ref(r, grid_ranges, allow_base=True)
+        elif r.dir == RefDir.NONE and not r.is_scalar_view():
+            raise UnsupportedPallas("windowed path with non-scalar local view")
+    if out is None:
+        raise UnsupportedPallas("no output ref")
+    agg = out.ref.agg or "assign"
+    if agg not in ("add", "assign"):
+        raise UnsupportedPallas(f"windowed path cannot aggregate with '{agg}'")
+
+    tile_ranges = tile.idx_ranges()
+    inner = {r.from_buf: r for r in tile.refs}
+
+    # output tile addressing: one plain tile var (or const 0) per dim
+    oref = inner.get(out.ref.into)
+    if oref is None:
+        raise UnsupportedPallas("tile block does not address the output view")
+    out_axis_vars: List[Optional[str]] = []
+    for e in oref.offsets:
+        if e.is_const():
+            if e.const != 0:
+                raise UnsupportedPallas(f"non-zero inner output offset {e}")
+            out_axis_vars.append(None)
+        elif len(e.terms) == 1 and e.const == 0 and e.terms[0][1] == 1:
+            out_axis_vars.append(e.terms[0][0])
+        else:
+            raise UnsupportedPallas(f"output tile offset {e} is not a plain index")
+    out_vars = {v for v in out_axis_vars if v}
+
+    # tile addressing of each input + window-var discovery
+    inner_offsets: Dict[str, Tuple] = {}
+    window: set = set()
+    for gr in ins:
+        ir = inner.get(gr.ref.into)
+        if ir is None:
+            raise UnsupportedPallas(f"tile block does not address input {gr.ref.into}")
+        for e in ir.offsets:
+            for n, c in e.terms:
+                if n not in tile_ranges:
+                    raise UnsupportedPallas(f"inner offset var {n} is not a tile index")
+                if c <= 0:
+                    raise UnsupportedPallas(f"negative inner offset step in {e}")
+            names = [n for n in e.names() if tile_ranges.get(n, 1) > 1]
+            if len(names) > 1:
+                carriers = [n for n in names if n in out_vars] or names
+                carrier = max(carriers, key=lambda n: tile_ranges[n])
+                window.update(n for n in names if n != carrier)
+        inner_offsets[gr.ref.into] = tuple(ir.offsets)
+
+    # constraints close over window vars: any constraint var that is
+    # neither an output-tile coordinate nor a grid index must be enumerated
+    exprs = [c.expr for c in outer.constraints] + [c.expr for c in tile.constraints]
+    for _ in range(4):
+        extra = set()
+        for e in exprs:
+            for n in e.names():
+                if n in out_vars or n in grid_ranges or n in window:
+                    continue
+                if n in tile_ranges:
+                    extra.add(n)
+                else:
+                    raise UnsupportedPallas(f"constraint var {n} is not in scope")
+        if not extra:
+            break
+        window |= extra
+    if window & out_vars:
+        raise UnsupportedPallas(
+            f"window vars {sorted(window & out_vars)} address the output")
+    window_vars = sorted(window)
+    n_steps = 1
+    for v in window_vars:
+        n_steps *= tile_ranges[v]
+    if n_steps > MAX_WINDOW_STEPS:
+        raise UnsupportedPallas(f"window too large ({n_steps} unrolled steps)")
+
+    out_grid_vars = {v for v in out.dim_vars if v}
+    red_vars = [v for v in grid_ranges if v not in out_grid_vars]
+    grid_order = [v for v in grid_ranges if v in out_grid_vars] + red_vars
+
+    root = _leaf_root(tile.stmts)
+    sides: Optional[List[_TNode]] = None
+    scale = 1.0
+    if agg == "add":
+        sig_of = {gr.ref.into: tuple(str(e) for e in inner_offsets[gr.ref.into])
+                  for gr in ins}
+        sides, scale = _split_sides(root, sig_of)
+        root = None
+    else:
+        # assign must be a pure per-point map: no enumerated windows, no
+        # leftover reduction axes (a raced overwrite otherwise)
+        if window_vars:
+            raise UnsupportedPallas("assign block with window vars")
+        if red_vars:
+            raise UnsupportedPallas("assign block with grid reduction vars")
+        leftover = [v for v, r in tile_ranges.items()
+                    if r > 1 and v not in out_vars]
+        if leftover:
+            raise UnsupportedPallas(f"assign block with reduction tile vars {leftover}")
+
+    return WindowedPlan(
+        grid_order=grid_order, grid_sizes=grid_ranges, in_refs=ins, out_ref=out,
+        red_vars=red_vars, tile_ranges=tile_ranges,
+        out_axis_vars=tuple(out_axis_vars), inner_offsets=inner_offsets,
+        window_vars=window_vars, agg=agg, sides=sides, root=root, scale=scale,
+        constraint_exprs=exprs,
+    )
+
+
+# --------------------------------------------------------------------------
 # Kernel emission
 # --------------------------------------------------------------------------
 def _eval_tnode(n: _TNode, tiles: Mapping[str, jnp.ndarray], dtype=None):
@@ -415,6 +667,314 @@ def _dimension_semantics(grid_order: List[str], red_vars) -> Optional[object]:
         return None
 
 
+def _index_map_for(gr: GridRef, gpos: Mapping[str, int]):
+    def imap(*gidx):
+        return tuple(gidx[gpos[v]] if v is not None else 0 for v in gr.dim_vars)
+    return imap
+
+
+def _halo_spec(gr: GridRef, grid_sizes: Mapping[str, int],
+               buf_shape: Tuple[int, ...], gpos: Mapping[str, int]):
+    """Emission plan for a halo-windowed input: ``prepare`` gathers the
+    overlapping tiles once per input (pad to cover the base/overflow, then
+    a strided gather per grid-addressed dim — halo rows materialized once,
+    duplicated by the margin/step ratio), and the returned BlockSpec
+    indexes the gathered array block-aligned (leading grid axes of extent
+    1)."""
+    dims = gr.dims
+    lead_vars = [d.var for d in dims if d.var is not None]
+    pads = []
+    total = 1
+    for d, bdim in zip(dims, buf_shape):
+        g = grid_sizes[d.var] if d.var is not None else 1
+        lo = d.base
+        hi = d.base + (d.step * (g - 1) if d.var is not None else 0) + d.size
+        pads.append((max(0, -lo), max(0, hi - bdim)))
+        total *= g * d.size if d.var is not None else d.size
+    if total * np.dtype(gr.ref.dtype).itemsize > MAX_HALO_BYTES:
+        raise UnsupportedPallas(
+            f"materialized halo view of {gr.ref.from_buf} too large "
+            f"({total} elems)")
+
+    def prepare(arr: jnp.ndarray) -> jnp.ndarray:
+        if any(p != (0, 0) for p in pads):
+            arr = jnp.pad(arr, pads)
+        lead = 0
+        for i, d in enumerate(dims):
+            start = d.base + pads[i][0]
+            if d.var is None:
+                arr = jax.lax.slice_in_dim(arr, start, start + d.size,
+                                           axis=lead + i)
+            else:
+                g = grid_sizes[d.var]
+                idx = start + d.step * jnp.arange(g)[:, None] + jnp.arange(d.size)[None, :]
+                arr = jnp.take(arr, idx, axis=lead + i)
+                arr = jnp.moveaxis(arr, lead + i, lead)
+                lead += 1
+        return arr
+
+    block_shape = (1,) * len(lead_vars) + tuple(d.size for d in dims)
+
+    def imap(*gidx):
+        return tuple(gidx[gpos[v]] for v in lead_vars) + (0,) * len(dims)
+
+    return prepare, block_shape, imap
+
+
+def _tile_slice(arr: jnp.ndarray, exprs, tile_ranges: Mapping[str, int],
+                wenv: Mapping[str, int]) -> Tuple[jnp.ndarray, List[str]]:
+    """Static slice of a tile for one window position: each offset expr,
+    after substituting the window vars, must reduce to ``c*v + k`` or a
+    constant.  Returns (sliced array, axis var names)."""
+    index: List[object] = []
+    axes: List[str] = []
+    for e in exprs:
+        ep = e.partial_eval(wenv)
+        if ep.is_const():
+            index.append(ep.const)
+            continue
+        if len(ep.terms) != 1:
+            raise UnsupportedPallas(f"multi-var tile access {ep} after windowing")
+        (v, c), k = ep.terms[0], ep.const
+        r = tile_ranges[v]
+        index.append(slice(k, k + c * (r - 1) + 1, c))
+        axes.append(v)
+    return arr[tuple(index)], axes
+
+
+def _eval_plain(n: _TNode, sliced: Mapping[str, Tuple], dtype):
+    """Evaluate a one-sided DAG on sliced tiles (all loads of a side share
+    one index signature, so shapes agree elementwise)."""
+    if n.kind == "load":
+        return sliced[n.buf][0]
+    if n.kind == "const":
+        return jnp.asarray(n.value, dtype)
+    args = [_eval_plain(a, sliced, dtype) for a in n.args]
+    fn = _J_UNARY[n.op] if len(args) == 1 and n.op in _J_UNARY else _J_BINARY[n.op]
+    return fn(*args)
+
+
+def _eval_dag_axes(n: _TNode, sliced: Mapping[str, Tuple],
+                   tile_ranges: Mapping[str, int], dtype):
+    """Evaluate a full (assign) DAG on sliced tiles, threading axis names
+    and broadcasting args onto the union axis order."""
+    if n.kind == "load":
+        return sliced[n.buf]
+    if n.kind == "const":
+        return jnp.asarray(n.value, dtype), []
+    vals = [_eval_dag_axes(a, sliced, tile_ranges, dtype) for a in n.args]
+    union: List[str] = []
+    for _, ax in vals:
+        for v in ax:
+            if v not in union:
+                union.append(v)
+    bargs = []
+    for arr, ax in vals:
+        if not ax:
+            bargs.append(arr)
+            continue
+        perm = [ax.index(v) for v in union if v in ax]
+        a = jnp.transpose(arr, perm)
+        a = a.reshape([tile_ranges[v] if v in ax else 1 for v in union])
+        bargs.append(a)
+    fn = _J_UNARY[n.op] if len(bargs) == 1 and n.op in _J_UNARY else _J_BINARY[n.op]
+    return fn(*bargs), union
+
+
+def _contract_sides(sides_vals: List[Tuple[jnp.ndarray, List[str]]],
+                    out_vars: set, acc_dtype) -> Tuple[jnp.ndarray, List[str]]:
+    """Contract 1 or 2 evaluated sides: shared non-output axes feed
+    ``dot_general`` (shared output axes batch), leftover non-output axes
+    are summed out."""
+    if len(sides_vals) == 1:
+        val, axes = sides_vals[0]
+        val = val.astype(acc_dtype)
+    else:
+        (la, lax), (ra, rax) = sides_vals
+        shared = [v for v in lax if v in rax]
+        contract = [v for v in shared if v not in out_vars]
+        batch = [v for v in shared if v in out_vars]
+        dn = ((tuple(lax.index(v) for v in contract),
+               tuple(rax.index(v) for v in contract)),
+              (tuple(lax.index(v) for v in batch),
+               tuple(rax.index(v) for v in batch)))
+        val = jax.lax.dot_general(la, ra, dn, preferred_element_type=acc_dtype)
+        axes = batch + [v for v in lax if v not in shared] + \
+            [v for v in rax if v not in shared]
+    extra = [v for v in axes if v not in out_vars]
+    if extra:
+        val = jnp.sum(val, axis=tuple(axes.index(v) for v in extra))
+        axes = [v for v in axes if v in out_vars]
+    return val, axes
+
+
+def _emit_windowed(plan: WindowedPlan, interpret: bool,
+                   mp: Optional[memplan.BlockPlan] = None,
+                   buffers: Optional[Mapping[str, TensorDecl]] = None) -> Callable:
+    grid = tuple(plan.grid_sizes[v] for v in plan.grid_order)
+    gpos = {v: i for i, v in enumerate(plan.grid_order)}
+    out_block = plan.out_ref.block_shape
+    out_dtype = np.dtype(plan.out_ref.ref.dtype)
+    acc_dtype = _acc_dtype(plan.out_ref.ref.dtype)
+    has_red = bool(plan.red_vars)
+    if mp is not None and ((mp.acc_bytes > 0) != has_red
+                           or set(mp.red_vars) != set(plan.red_vars)):
+        raise UnsupportedPallas(
+            f"memory plan disagrees with emitter: plan acc={mp.acc_bytes}B "
+            f"red={sorted(mp.red_vars)} vs emitter red={sorted(plan.red_vars)}")
+
+    preps: List[Tuple[Optional[Callable], Tuple[int, ...]]] = []
+    in_specs = []
+    for gr in plan.in_refs:
+        if gr.halo:
+            if buffers is None or gr.ref.from_buf not in buffers:
+                raise UnsupportedPallas(
+                    f"halo view of {gr.ref.from_buf} needs the buffer shape")
+            prep, bshape, imap = _halo_spec(
+                gr, plan.grid_sizes, tuple(buffers[gr.ref.from_buf].shape), gpos)
+            preps.append((prep, bshape))
+            in_specs.append(pl.BlockSpec(bshape, imap))
+        else:
+            preps.append((None, gr.block_shape))
+            in_specs.append(pl.BlockSpec(gr.block_shape, _index_map_for(gr, gpos)))
+    out_spec = pl.BlockSpec(out_block, _index_map_for(plan.out_ref, gpos))
+    out_full_shape = tuple(
+        s * (plan.grid_sizes[v] if v else 1)
+        for s, v in zip(out_block, plan.out_ref.dim_vars))
+
+    combos = list(itertools.product(
+        *[range(plan.tile_ranges[v]) for v in plan.window_vars])) or [()]
+    out_vars = {v for v in plan.out_axis_vars if v}
+    out_axis_pos = {v: d for d, v in enumerate(plan.out_axis_vars) if v}
+    cast_ints = np.dtype(out_dtype).kind in "iu"
+    has_mask = bool(plan.constraint_exprs)
+
+    def to_out_block(val: jnp.ndarray, axes: List[str]) -> jnp.ndarray:
+        target = [v for v in plan.out_axis_vars if v is not None and v in axes]
+        perm = [axes.index(v) for v in target]
+        if perm != list(range(len(axes))):
+            val = jnp.transpose(val, perm)
+        shape = [plan.tile_ranges[v] if (v is not None and v in axes) else 1
+                 for v in plan.out_axis_vars]
+        return jnp.broadcast_to(val.reshape(shape), out_block)
+
+    def step_mask(wenv: Mapping[str, int]):
+        mask = None
+        for e in plan.constraint_exprs:
+            ep = e.partial_eval(wenv)
+            if ep.is_const():
+                if ep.const >= 0:
+                    continue
+                m = jnp.zeros(out_block, jnp.bool_)
+            else:
+                acc = jnp.full(out_block, ep.const, jnp.int32)
+                for n, c in ep.terms:
+                    if n in out_axis_pos:
+                        acc = acc + c * jax.lax.broadcasted_iota(
+                            jnp.int32, out_block, out_axis_pos[n])
+                    else:
+                        acc = acc + c * pl.program_id(gpos[n])
+                m = acc >= 0
+            mask = m if mask is None else mask & m
+        return mask
+
+    def kernel(*refs):
+        if has_red:
+            *ins, out_ref, acc_ref = refs
+        else:
+            *ins, out_ref = refs
+            acc_ref = None
+        tiles = {}
+        for (prep, _bshape), gr, ref in zip(preps, plan.in_refs, ins):
+            t = ref[...]
+            if t.shape != gr.block_shape:
+                t = t.reshape(gr.block_shape)
+            tiles[gr.ref.into] = t
+        total = None
+        for combo in combos:
+            wenv = dict(zip(plan.window_vars, combo))
+            sliced = {}
+            for gr in plan.in_refs:
+                arr, axes = _tile_slice(tiles[gr.ref.into],
+                                        plan.inner_offsets[gr.ref.into],
+                                        plan.tile_ranges, wenv)
+                if cast_ints:
+                    arr = arr.astype(acc_dtype)
+                sliced[gr.ref.into] = (arr, axes)
+            if plan.sides is not None:
+                vals = []
+                for side in plan.sides:
+                    axes = next((sliced[l.buf][1] for l in side.loads()), [])
+                    vals.append((_eval_plain(side, sliced, acc_dtype), axes))
+                val, axes = _contract_sides(vals, out_vars, acc_dtype)
+            else:
+                val, axes = _eval_dag_axes(plan.root, sliced,
+                                           plan.tile_ranges, acc_dtype)
+            val = to_out_block(val, axes).astype(acc_dtype)
+            if plan.scale != 1.0:
+                val = val * jnp.asarray(plan.scale, acc_dtype)
+            if has_mask:
+                mask = step_mask(wenv)
+                if mask is not None:
+                    # masked store: constrained-out points contribute the
+                    # aggregation identity (0 for add; assign buffers are
+                    # zero-initialized, paper Fig. 4's "overflow elements
+                    # removed by constraints")
+                    val = jnp.where(mask, val, jnp.zeros_like(val))
+            total = val if total is None else total + val
+        if has_red:
+            first = functools.reduce(
+                jnp.logical_and,
+                [pl.program_id(gpos[v]) == 0 for v in plan.red_vars])
+            last = functools.reduce(
+                jnp.logical_and,
+                [pl.program_id(gpos[v]) == plan.grid_sizes[v] - 1
+                 for v in plan.red_vars])
+
+            @pl.when(first)
+            def _init():
+                acc_ref[...] = jnp.zeros(out_block, acc_dtype)
+
+            acc_ref[...] += total
+
+            @pl.when(last)
+            def _flush():
+                out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+        else:
+            out_ref[...] = total.astype(out_ref.dtype)
+
+    kwargs = {}
+    if not interpret:
+        cp = _dimension_semantics(plan.grid_order,
+                                  mp.red_vars if mp is not None else plan.red_vars)
+        if cp is not None:
+            kwargs["compiler_params"] = cp
+    scratch = [pltpu.VMEM(out_block, acc_dtype)] if has_red else []
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_full_shape, out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )
+
+    def fn(arrays: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        args = []
+        for (prep, _), gr in zip(preps, plan.in_refs):
+            a = jnp.asarray(arrays[gr.ref.from_buf])
+            args.append(prep(a) if prep is not None else a)
+        return call(*args)
+
+    fn.out_shape = out_full_shape
+    fn.out_dtype = out_dtype
+    fn.out_base = plan.out_ref.base
+    fn.in_bufs = [g.ref.from_buf for g in plan.in_refs]
+    return fn
+
+
 def _emit_contraction(plan: ContractionPlan, interpret: bool,
                       mp: Optional[memplan.BlockPlan] = None) -> Callable:
     grid = tuple(plan.grid_sizes[v] for v in plan.grid_order)
@@ -425,17 +985,14 @@ def _emit_contraction(plan: ContractionPlan, interpret: bool,
     extra = [g for g in plan.in_refs if g.ref.into not in side]
     order = operand_grs + extra
 
-    def index_map_for(gr: GridRef):
-        def imap(*gidx):
-            return tuple(gidx[gpos[v]] if v is not None else 0 for v in gr.dim_vars)
-        return imap
-
     dnums = ((plan.lhs_contract, plan.rhs_contract), ((), ()))
     out_dtype = np.dtype(plan.out_ref.ref.dtype)
+    acc_dtype = _acc_dtype(plan.out_ref.ref.dtype)
+    cast_ints = np.dtype(out_dtype).kind in "iu"
     out_block = plan.out_ref.block_shape
     has_red = bool(plan.red_vars)
     # The memory plan decides scratch residency: a revisited output plans
-    # one f32 partial-sum tile that must agree with the emitter's own
+    # one partial-sum tile that must agree with the emitter's own
     # reduction analysis — a mismatch means the schedule placed the
     # accumulator differently than this kernel would use it.
     if mp is not None:
@@ -457,9 +1014,11 @@ def _emit_contraction(plan: ContractionPlan, interpret: bool,
             *ins, out_ref = refs
             acc_ref = None
         tiles = {g.ref.into: ins[i][...] for i, g in enumerate(order)}
+        if cast_ints:
+            tiles = {k: v.astype(acc_dtype) for k, v in tiles.items()}
         lhs = _eval_tnode(plan.lhs, tiles)
         rhs = _eval_tnode(plan.rhs, tiles)
-        part = jax.lax.dot_general(lhs, rhs, dnums, preferred_element_type=jnp.float32)
+        part = jax.lax.dot_general(lhs, rhs, dnums, preferred_element_type=acc_dtype)
         part = part.reshape(out_block)
         if plan.scale != 1.0:
             part = part * jnp.asarray(plan.scale, part.dtype)
@@ -475,7 +1034,7 @@ def _emit_contraction(plan: ContractionPlan, interpret: bool,
 
             @pl.when(first)
             def _init():
-                acc_ref[...] = jnp.zeros(out_block, jnp.float32)
+                acc_ref[...] = jnp.zeros(out_block, acc_dtype)
 
             acc_ref[...] += part
 
@@ -491,8 +1050,8 @@ def _emit_contraction(plan: ContractionPlan, interpret: bool,
                 val = _apply_epilogue(plan, val, tile_args)
             out_ref[...] = val.astype(out_ref.dtype)
 
-    in_specs = [pl.BlockSpec(g.block_shape, index_map_for(g)) for g in order]
-    out_spec = pl.BlockSpec(out_block, index_map_for(plan.out_ref))
+    in_specs = [pl.BlockSpec(g.block_shape, _index_map_for(g, gpos)) for g in order]
+    out_spec = pl.BlockSpec(out_block, _index_map_for(plan.out_ref, gpos))
     out_full_shape = tuple(
         s * (plan.grid_sizes[v] if v else 1)
         for s, v in zip(out_block, plan.out_ref.dim_vars)
@@ -511,7 +1070,7 @@ def _emit_contraction(plan: ContractionPlan, interpret: bool,
     if has_red:
         # sized by the memory plan when available (acc_bytes == f32 out
         # tile, verified above), else by the emitter's own analysis
-        scratch = [pltpu.VMEM(out_block, jnp.float32)]
+        scratch = [pltpu.VMEM(out_block, acc_dtype)]
     call = pl.pallas_call(
         kernel,
         grid=grid,
@@ -529,6 +1088,7 @@ def _emit_contraction(plan: ContractionPlan, interpret: bool,
 
     fn.out_shape = out_full_shape
     fn.out_dtype = out_dtype
+    fn.out_base = plan.out_ref.base
     fn.in_bufs = [g.ref.from_buf for g in order]
     return fn
 
@@ -538,11 +1098,6 @@ def _emit_elementwise(plan: ElementwisePlan, interpret: bool) -> Callable:
     gpos = {v: i for i, v in enumerate(plan.grid_order)}
     out_block = plan.out_ref.block_shape
     out_dtype = np.dtype(plan.out_ref.ref.dtype)
-
-    def index_map_for(gr: GridRef):
-        def imap(*gidx):
-            return tuple(gidx[gpos[v]] if v is not None else 0 for v in gr.dim_vars)
-        return imap
 
     def kernel(*refs):
         *ins, out_ref = refs
@@ -558,8 +1113,9 @@ def _emit_elementwise(plan: ElementwisePlan, interpret: bool) -> Callable:
     call = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec(g.block_shape, index_map_for(g)) for g in plan.in_refs],
-        out_specs=pl.BlockSpec(out_block, index_map_for(plan.out_ref)),
+        in_specs=[pl.BlockSpec(g.block_shape, _index_map_for(g, gpos))
+                  for g in plan.in_refs],
+        out_specs=pl.BlockSpec(out_block, _index_map_for(plan.out_ref, gpos)),
         out_shape=jax.ShapeDtypeStruct(
             tuple(s * (plan.grid_sizes[v] if v else 1)
                   for s, v in zip(out_block, plan.out_ref.dim_vars)),
@@ -576,82 +1132,271 @@ def _emit_elementwise(plan: ElementwisePlan, interpret: bool) -> Callable:
     fn.out_shape = tuple(s * (plan.grid_sizes[v] if v else 1)
                          for s, v in zip(out_block, plan.out_ref.dim_vars))
     fn.out_dtype = out_dtype
+    fn.out_base = plan.out_ref.base
     fn.in_bufs = [g.ref.from_buf for g in plan.in_refs]
     return fn
 
 
 def lower_op_pallas(outer: Block, interpret: bool = False,
-                    pipeline_depth: int = 2) -> Callable:
+                    pipeline_depth: int = 2,
+                    buffers: Optional[Mapping[str, TensorDecl]] = None) -> Callable:
     """Returns fn(arrays: dict) -> output array for one optimized op block
     or fusion group (a single ``pallas_call``).  ``pipeline_depth`` is the
     hardware's DMA-pipeline depth (``HardwareConfig.pipeline_depth``),
-    threaded into the memory plan so its slot figures match the schedule's."""
+    threaded into the memory plan so its slot figures match the schedule's;
+    ``buffers`` (the program's declarations) sizes the padded operand of
+    halo views.
+
+    Emission paths are tried in order — dense contraction / elementwise
+    for constraint-free aligned blocks, then the windowed (halo + masked
+    store) path — and when *every* path rejects the block, the raised
+    ``UnsupportedPallas`` carries each path's reason (the per-block
+    fallback trace the driver records)."""
     outer = _ensure_grid(outer)
-    _check_no_constraints(outer)
     out_ref = next((r for r in outer.refs if r.dir in (RefDir.OUT, RefDir.INOUT)), None)
     if out_ref is None:
         raise UnsupportedPallas("no output ref")
     # the memory plan of this kernel's grid block: slot classification
-    # (streamed / resident / accumulator) that sizes the VMEM scratch and
-    # gates dimension_semantics below
+    # (streamed / resident / halo / accumulator) that sizes the VMEM
+    # scratch and gates dimension_semantics below
     mp = memplan.plan_block(outer, depth=pipeline_depth)
     agg = out_ref.agg or "assign"
-    if agg == "assign" and not outer.sub_blocks():
-        fn = _emit_elementwise(extract_elementwise(outer), interpret)
-    elif agg == "assign":
-        # a fused group's outer agg is on its local accumulator; decide by
-        # whether a reduction sub-structure exists
+    constrained = _is_constrained(outer)
+
+    fn: Optional[Callable] = None
+    errors: List[str] = []
+
+    def attempt(name: str, build: Callable[[], Callable]) -> None:
+        nonlocal fn
+        if fn is not None:
+            return
         try:
-            fn = _emit_contraction(extract_contraction(outer), interpret, mp=mp)
-        except UnsupportedPallas as contraction_err:
-            try:
-                fn = _emit_elementwise(extract_elementwise(outer), interpret)
-            except UnsupportedPallas:
-                # the sub-block structure says "contraction"; its error is
-                # the one worth recording as the fallback reason
-                raise contraction_err
-    else:
-        fn = _emit_contraction(extract_contraction(outer), interpret, mp=mp)
+            fn = build()
+        except UnsupportedPallas as e:
+            errors.append(f"{name}: {e}")
+
+    if not constrained:
+        if agg == "assign" and not outer.sub_blocks():
+            attempt("elementwise",
+                    lambda: _emit_elementwise(extract_elementwise(outer), interpret))
+        elif agg == "assign":
+            # a fused group's outer agg is on its local accumulator; decide
+            # by whether a reduction sub-structure exists — both reasons
+            # are recorded when neither path fits
+            attempt("contraction",
+                    lambda: _emit_contraction(extract_contraction(outer), interpret, mp=mp))
+            attempt("elementwise",
+                    lambda: _emit_elementwise(extract_elementwise(outer), interpret))
+        else:
+            attempt("contraction",
+                    lambda: _emit_contraction(extract_contraction(outer), interpret, mp=mp))
+    # the general halo/masked path: constraint-carrying blocks (boundary
+    # remainders, conv halos) and halo views of constraint-free interiors
+    attempt("windowed",
+            lambda: _emit_windowed(extract_windowed(outer), interpret,
+                                   mp=mp, buffers=buffers))
+    if fn is None:
+        raise UnsupportedPallas("; ".join(errors))
     fn.out_buf = out_ref.from_buf
     return fn
 
 
-def lower_program_pallas(prog: Program, interpret: bool = False,
-                         pipeline_depth: int = 2) -> Callable:
+# --------------------------------------------------------------------------
+# Program composition: per-block hybrid lowering
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Unit:
+    """One lowering unit: the top-level blocks sharing a semantic member
+    set (a fusion group, or the boundary pieces of one op — pieces
+    partition an iteration space and must lower, or fall back, together)."""
+
+    members: List[str]
+    blocks: List[Block]
+    first: int
+    level: int
+
+    @property
+    def name(self) -> str:
+        return "+".join(self.members)
+
+
+def _units_of(prog: Program) -> List[_Unit]:
+    from .passes.fuse import members_of
+
+    units: Dict[Tuple[str, ...], _Unit] = {}
+    order: List[Tuple[str, ...]] = []
+    for i, s in enumerate(prog.entry.stmts):
+        if not isinstance(s, Block):
+            continue
+        key = tuple(members_of(s))
+        if key not in units:
+            units[key] = _Unit(members=list(key), blocks=[], first=i, level=1 << 30)
+            order.append(key)
+        u = units[key]
+        u.blocks.append(s)
+        for t in s.tags:
+            if t.startswith("sched:"):
+                u.level = min(u.level, int(t.split(":", 1)[1]))
+    for u in units.values():
+        if u.level == 1 << 30:
+            u.level = u.first
+    return [units[k] for k in order]
+
+
+def _clip_extents(fn, decl: TensorDecl, block_name: str) -> Tuple[int, ...]:
+    """In-bounds extent of the kernel's output region (an overflow-rounded
+    boundary piece writes a view whose tail rows the constraints proved
+    dead — they are sliced off before placement)."""
+    base = getattr(fn, "out_base", (0,) * len(fn.out_shape))
+    if len(base) != len(decl.shape) or len(fn.out_shape) != len(decl.shape):
+        raise UnsupportedPallas(
+            f"{block_name}: kernel writes rank-{len(fn.out_shape)} region "
+            f"into rank-{len(decl.shape)} buffer {decl.name}")
+    clip = []
+    for b, s, d in zip(base, fn.out_shape, decl.shape):
+        if b < 0 or b >= d:
+            raise UnsupportedPallas(
+                f"{block_name}: output region base {base} outside buffer "
+                f"{decl.name}{decl.shape}")
+        clip.append(min(s, d - b))
+    return tuple(clip)
+
+
+def _place(env: Dict[str, jnp.ndarray], decl: TensorDecl, fn,
+           out: jnp.ndarray) -> jnp.ndarray:
+    """Place a kernel's output region into its buffer (identity when the
+    kernel covers the whole buffer)."""
+    base = getattr(fn, "out_base", (0,) * len(fn.out_shape))
+    if all(b == 0 for b in base) and tuple(fn.out_shape) == tuple(decl.shape):
+        return out
+    clip = fn.out_clip
+    if clip != tuple(fn.out_shape):
+        out = out[tuple(slice(0, c) for c in clip)]
+    cur = env.get(decl.name)
+    if cur is None:
+        cur = jnp.zeros(decl.shape, np.dtype(decl.dtype))
+    return jax.lax.dynamic_update_slice(cur, out.astype(cur.dtype), base)
+
+
+def lower_program_hybrid(prog: Program, interpret: bool = False,
+                         pipeline_depth: int = 2,
+                         strict: bool = False) -> Callable:
     """Lower every op block / fusion group to one Pallas kernel and
-    compose them in program order; intermediates between groups live in
-    outer memory (HBM).  Raises ``UnsupportedPallas`` (whole-program jnp
-    fallback) when any block cannot lower."""
+    compose the units in wavefront order; intermediates between groups
+    live in outer memory (HBM).
+
+    The backend degrades **per unit**: a unit whose blocks cannot lower
+    falls back to the jnp backend for just those semantic ops
+    (``lower_group_jnp``), the reason is recorded on the returned
+    callable (``block_backends`` / ``block_reasons``), and every other
+    unit keeps its kernels.  ``strict=True`` restores the all-or-nothing
+    contract (raise on the first unsupported block — the
+    ``lower_program_pallas`` entry point)."""
     blocks = [s for s in prog.entry.stmts if isinstance(s, Block)]
     if not blocks:
         raise UnsupportedPallas("no op blocks")
-    kernels = []
-    written = set()
-    for b in blocks:
+    units = _units_of(prog)
+    semantic = prog.source
+
+    steps: List[Tuple[_Unit, str, object]] = []
+    backends: Dict[str, str] = {}
+    reasons: Dict[str, str] = {}
+    written_regions: Dict[str, List[Tuple[Tuple[int, ...], Tuple[int, ...]]]] = {}
+    written: set = set()
+    n_pallas = 0
+    for u in units:
         try:
-            fn = lower_op_pallas(b, interpret=interpret,
-                                 pipeline_depth=pipeline_depth)
+            kernels = []
+            regions = []
+            for b in u.blocks:
+                fn = lower_op_pallas(b, interpret=interpret,
+                                     pipeline_depth=pipeline_depth,
+                                     buffers=prog.buffers)
+                decl = prog.buffers.get(fn.out_buf)
+                if decl is None:
+                    raise UnsupportedPallas(
+                        f"{b.name}: kernel writes unknown buffer {fn.out_buf}")
+                fn.out_clip = _clip_extents(fn, decl, b.name)
+                base = getattr(fn, "out_base", (0,) * len(fn.out_shape))
+                for obase, oclip in written_regions.get(fn.out_buf, []) + regions:
+                    if all(b0 < o0 + c0 and o0 < b0 + c1 for b0, c1, o0, c0 in
+                           zip(base, fn.out_clip, obase, oclip)):
+                        # two writers of one region cannot be composed by
+                        # placement (and the jnp group executor would
+                        # clobber, not accumulate) — refuse the program
+                        raise _ProgramFallback(
+                            f"{b.name}: overlapping writes to {fn.out_buf}")
+                regions.append((base, fn.out_clip))
+                kernels.append(fn)
+            for fn, region in zip(kernels, regions):
+                written_regions.setdefault(fn.out_buf, []).append(region)
+                written.add(fn.out_buf)
+            steps.append((u, "pallas", kernels))
+            backends[u.name] = "pallas"
+            n_pallas += len(kernels)
+        except _ProgramFallback:
+            raise
         except UnsupportedPallas as e:
-            raise UnsupportedPallas(f"{b.name}: {e}")
-        decl = prog.buffers.get(fn.out_buf)
-        if decl is None or tuple(decl.shape) != tuple(fn.out_shape):
-            raise UnsupportedPallas(
-                f"{b.name}: kernel writes {fn.out_shape}, buffer is "
-                f"{tuple(decl.shape) if decl else None}")
-        if fn.out_buf in written:
-            raise UnsupportedPallas(f"{b.name}: {fn.out_buf} written twice")
-        written.add(fn.out_buf)
-        kernels.append(fn)
-    outs = list(prog.outputs)
-    missing = [o for o in outs if o not in written]
+            if strict:
+                raise UnsupportedPallas(f"{u.blocks[0].name}: {e}")
+            if semantic is None:
+                raise UnsupportedPallas(
+                    f"{u.blocks[0].name}: {e} (and no semantic source for a "
+                    f"per-block jnp fallback)")
+            from .lower_jnp import lower_group_jnp
+
+            gfn = lower_group_jnp(semantic, u.members)
+            steps.append((u, "jnp", gfn))
+            backends[u.name] = "jnp"
+            reasons[u.name] = str(e)
+            for n in u.members:
+                for s in semantic.entry.stmts:
+                    if isinstance(s, Block) and s.name == n:
+                        for r in s.refs:
+                            if r.dir in (RefDir.OUT, RefDir.INOUT):
+                                if r.from_buf in written:
+                                    raise _ProgramFallback(
+                                        f"{s.name}: multiple units write "
+                                        f"{r.from_buf}")
+                                written.add(r.from_buf)
+                                # a jnp unit writes the whole buffer: any
+                                # later writer overlaps by construction
+                                d = prog.buffers.get(r.from_buf)
+                                if d is not None:
+                                    written_regions.setdefault(
+                                        r.from_buf, []).append(
+                                        ((0,) * len(d.shape), tuple(d.shape)))
+
+    missing = [o for o in prog.outputs if o not in written]
     if missing:
         raise UnsupportedPallas(f"outputs {missing} not produced by any kernel")
+    # wavefront composition: units ordered by schedule level (ties by
+    # program order) — the order the pipelined cost model prices
+    steps.sort(key=lambda s: (s[0].level, s[0].first))
+    outs = list(prog.outputs)
+    buffers = prog.buffers
 
     def run(arrays: Mapping[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
         env: Dict[str, jnp.ndarray] = {k: jnp.asarray(v) for k, v in arrays.items()}
-        for fn in kernels:
-            env[fn.out_buf] = fn(env)
+        for u, kind, obj in steps:
+            if kind == "pallas":
+                for fn in obj:
+                    env[fn.out_buf] = _place(env, buffers[fn.out_buf], fn, fn(env))
+            else:
+                env.update(obj(env))
         return {n: env[n] for n in outs}
 
-    run.n_kernels = len(kernels)
+    run.n_kernels = n_pallas + sum(1 for _, kind, _ in steps if kind == "jnp")
+    run.n_pallas = n_pallas
+    run.block_backends = backends
+    run.block_reasons = reasons
     return run
+
+
+def lower_program_pallas(prog: Program, interpret: bool = False,
+                         pipeline_depth: int = 2) -> Callable:
+    """Strict whole-program lowering: every op block / fusion group must
+    lower to a Pallas kernel, else ``UnsupportedPallas`` (the caller
+    falls back to the jnp backend wholesale)."""
+    return lower_program_hybrid(prog, interpret=interpret,
+                                pipeline_depth=pipeline_depth, strict=True)

@@ -64,7 +64,11 @@ class ViewSpec:
     slots: int = 1       # pipeline slots (streamed views get pipeline_depth)
     start: int = 0       # live interval [start, end], inclusive, in
     end: int = 0         # scheduled-statement-order positions
-    kind: str = "resident"  # stream | resident | acc | scratch | local
+    kind: str = "resident"  # stream | halo | resident | acc | scratch | local
+    halo_bytes: int = 0  # margin bytes of a halo-windowed streamed slot
+    #                      (slot = tile core + this overlap, already in
+    #                      nbytes — recorded so reports can price the
+    #                      overlap the conv windows carry)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +144,7 @@ class BlockPlan:
     red_vars: Tuple[str, ...] = ()      # grid vars that revisit the output
     parallel_vars: Tuple[str, ...] = ()  # grid vars that stream the output
     acc_bytes: int = 0                  # f32 accumulator scratch (0 = none)
+    halo_bytes: int = 0                 # total halo margin across slots
 
     def addr_of(self, name: str) -> Optional[int]:
         for a in self.allocs:
@@ -154,8 +159,10 @@ class BlockPlan:
             "bump_bytes": self.bump_bytes,
             "depth": self.depth,
             "acc_bytes": self.acc_bytes,
+            "halo_bytes": self.halo_bytes,
             "slots": {a.view.name: {"addr": a.addr, "bytes": a.nbytes,
-                                    "kind": a.view.kind, "slots": a.view.slots}
+                                    "kind": a.view.kind, "slots": a.view.slots,
+                                    "halo_bytes": a.view.halo_bytes}
                       for a in self.allocs},
         }
 
@@ -249,12 +256,18 @@ def plan_block(block: Block, depth: int = 2) -> BlockPlan:
         revisited = is_out and bool(red_vars)
         kind, slots = slots_for(is_out, streamed, revisited, depth)
         nbytes = prod_bytes(r) if grid else view_span_bytes(r, ranges)
+        halo = halo_margin_bytes(r, grid_vars) if grid else 0
+        if halo > 0 and kind == "stream":
+            # a halo-windowed streamed slot: the pipeline fetches the tile
+            # core PLUS the overlap margin every grid step (priced in
+            # nbytes already — the view shape carries the halo)
+            kind = "halo"
         if grid:
             s, e = 0, max(len(body) - 1, 0)
         else:
             s, e = _body_interval(body, r.into)
         views.append(ViewSpec(name=r.into, nbytes=nbytes, slots=slots,
-                              start=s, end=e, kind=kind))
+                              start=s, end=e, kind=kind, halo_bytes=halo))
 
     acc_bytes = 0
     if out_ref is not None and red_vars:
@@ -271,7 +284,23 @@ def plan_block(block: Block, depth: int = 2) -> BlockPlan:
     return BlockPlan(block=block.name, allocs=allocs, peak_bytes=peak,
                      bump_bytes=bump_bytes(views), depth=depth, grid=grid,
                      red_vars=red_vars, parallel_vars=parallel_vars,
-                     acc_bytes=acc_bytes)
+                     acc_bytes=acc_bytes,
+                     halo_bytes=sum(v.halo_bytes * max(v.slots, 1) for v in views))
+
+
+def halo_margin_bytes(ref: Refinement, grid_vars: Set[str]) -> int:
+    """Overlap margin of one grid-streamed view: bytes beyond the tile
+    *core* (the grid step) that a halo window re-fetches every grid step.
+    A dim stepped by a grid var with coefficient < extent (the conv case:
+    offset ``8*x - 1`` with extent 10) contributes ``extent - step``
+    margin; block-aligned dims contribute none."""
+    core = 1
+    full = 1
+    for e, size in zip(ref.offsets, ref.shape):
+        step = sum(abs(c) for n, c in e.terms if n in grid_vars)
+        core *= step if 0 < step < size else size
+        full *= size
+    return (full - core) * dtype_bytes(ref.dtype)
 
 
 def prod_bytes(ref: Refinement) -> int:

@@ -248,6 +248,7 @@ def autotile_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program
                 "mem_bytes": cost.mem_bytes, "n_tiles": cost.n_tiles,
                 "feasible": cost.feasible,
                 "latency_s": cost.latency_s, "plan_bytes": cost.plan_bytes,
+                "halo_bytes": cost.halo_bytes,
                 "pipeline_depth": hw.pipeline_depth,
             })
         if all(tiles.get(v, free[v]) >= free[v] for v in free) and cost.feasible:

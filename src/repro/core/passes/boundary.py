@@ -26,17 +26,33 @@ def _n_constraints(blk: Block) -> int:
 
 
 def split_boundary(outer: Block, mode: str = "remainder", max_splits: int = 2) -> List[Block]:
-    """Returns a list of blocks that partition ``outer``'s iteration space."""
+    """Returns a list of blocks that partition ``outer``'s iteration space.
+
+    ``max_splits`` is a **per-index** budget: each index may cut at most
+    that many pieces, and one index's splits never consume another's
+    budget (a 2-D conv splits both spatial axes; the old global budget
+    left the second axis unsplit and constraint-carrying).
+
+    Pieces are named deterministically by the *segment start* of every
+    split index (``<name>.<idx><lo>``), so a piece covering the same
+    sub-range always gets the same name regardless of how many sibling
+    segments the mode produced — stable keys for the tiling oracle, the
+    memory-plan tags, and the pass trace.  Pieces the constraint pruning
+    proved constraint-free are tagged ``interior`` (the Pallas emitter
+    trusts the proof and lowers them densely, without re-deriving the
+    constraints); the rest are tagged ``boundary`` (masked-store path)."""
     pieces = [outer]
-    splits_done = 0
     for idx in list(outer.idxs):
-        if idx.is_passthrough() or idx.range < 2 or splits_done >= max_splits:
+        if idx.is_passthrough() or idx.range < 2:
             continue
         v, n = idx.name, idx.range
         cut_points = [n - 1] if mode == "remainder" else sorted({1, n - 1})
+        splits_this_idx = 0
         new_pieces: List[Block] = []
         for p in pieces:
-            if not any(i.name == v and i.range == n for i in p.idxs):
+            if splits_this_idx >= max_splits or not any(
+                i.name == v and i.range == n for i in p.idxs
+            ):
                 new_pieces.append(p)
                 continue
             base = _n_constraints(p)
@@ -56,14 +72,17 @@ def split_boundary(outer: Block, mode: str = "remainder", max_splits: int = 2) -
             if sum(_n_constraints(c) for c in cand) < base * len(cand) and any(
                 _n_constraints(c) < base for c in cand
             ):
-                for k, c in enumerate(cand):
-                    c.name = f"{p.name}.{v}{k}"
+                for (lo, _hi), c in zip(segs, cand):
+                    c.name = f"{p.name}.{v}{lo}"
                     c.add_tag("boundary_split")
                 new_pieces.extend(cand)
-                splits_done += 1
+                splits_this_idx += 1
             else:
                 new_pieces.append(p)
         pieces = new_pieces
+    for p in pieces:
+        if "boundary_split" in p.tags:
+            p.add_tag("interior" if _n_constraints(p) == 0 else "boundary")
     return pieces
 
 

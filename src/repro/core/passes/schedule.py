@@ -129,6 +129,10 @@ def schedule_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program
                    "arena_bump_bytes": bp.bump_bytes,
                    "acc_bytes": bp.acc_bytes,
                    "depth": bp.depth}
+            if bp.halo_bytes:
+                # halo-windowed streamed slots: margin bytes the pipeline
+                # re-fetches each grid step (slot = tile + this margin)
+                rec["halo_bytes"] = bp.halo_bytes
             report.append(rec)
     if report is not None:
         report.append({"program_plan": plan.to_json()})

@@ -68,6 +68,11 @@ def stencil_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
                     # already stencil-sized (or too small): just tag it
                     if all(ranges.get(v, 0) <= d for v, d in ((m_var, sten.dims[0]), (n_var, sten.dims[1]), (k_var, sten.dims[2])) if v):
                         s.add_tag(sten.name)
+                        if not s.constraints:
+                            # proof for the lowerer: the stencil fit was
+                            # established on an unconstrained tile — no
+                            # masking needed to feed the compute unit
+                            s.add_tag("dense")
                     continue
                 new = split_block(s, tiles, name_suffix="s")
                 if "tile" in s.tags:
@@ -79,6 +84,8 @@ def stencil_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
                 inner = new.stmts[0]
                 assert isinstance(inner, Block)
                 inner.add_tag(sten.name, "stenciled")
+                if not inner.constraints:
+                    inner.add_tag("dense")
                 blk.stmts[i] = new
             else:
                 visit(s)

@@ -17,7 +17,10 @@ to catch.  The corpus mirrors the shapes the framework actually runs:
 * ``fig4_conv``      — the paper's Fig. 4/5 int8 3×3 conv (the
                        cache-line cost model's reference program);
 * ``fig5_conv_f32``  — the same conv in f32 (the executable Fig. 5
-                       variant the benchmarks measure).
+                       variant the benchmarks measure);
+* ``conv_mlp``       — conv head + channel-mixing matmul, the mixed
+                       program the per-block hybrid Pallas backend runs
+                       (windowed conv kernel + dense matmul kernel).
 
 Shapes are deliberately modest (compile-speed-bound: a 32-point sweep
 compiles every workload at every unique config) but large enough on the
@@ -109,6 +112,22 @@ def fig5_conv_f32() -> Program:
         out="O", name="fig5_conv_f32")
 
 
+def conv_mlp(x: int = 24, y: int = 24, c: int = 8, k: int = 16, m: int = 32) -> Program:
+    """Conv head + channel-mixing matmul: a mixed program for the
+    per-block hybrid backend — the conv lowers via the halo-aware
+    windowed path, the matmul via the dense contraction path, and the
+    kernel-count axis reflects both."""
+    tp = TileProgram("conv_mlp")
+    tp.input("I", (x, y, c))
+    tp.input("F", (3, 3, c, k))
+    tp.input("W", (k, m))
+    tp.temp("C", (x, y, k))
+    tp.output("O", (x, y, m))
+    tp.op("C[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]", name="conv")
+    tp.op("O[x, y, m] += C[x, y, k] * W[k, m]", name="proj")
+    return tp.build()
+
+
 _ALL: Dict[str, Workload] = {w.name: w for w in (
     Workload("mm_bias_gelu", mm_bias_gelu, tags=("linear", "fusion")),
     Workload("ffn_relu2", ffn_relu2, tags=("ffn", "fusion")),
@@ -116,6 +135,7 @@ _ALL: Dict[str, Workload] = {w.name: w for w in (
     Workload("moe_ffn", moe_ffn, tags=("moe", "diamond")),
     Workload("fig4_conv", fig4_conv, tags=("paper", "conv")),
     Workload("fig5_conv_f32", fig5_conv_f32, tags=("paper", "conv")),
+    Workload("conv_mlp", conv_mlp, tags=("conv", "hybrid")),
 )}
 
 CORPORA: Dict[str, Sequence[str]] = {
