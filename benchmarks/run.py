@@ -15,7 +15,7 @@ example, both reproduced exactly):
 * fig5: the tiling rewrite — wall-clock of the XLA-compiled lowering
   before/after the pass pipeline (semantics asserted equal).
 
-Framework benches: the stripe_jit compile cache (cold vs warm-memory vs
+Framework benches: the api.stripe_jit compile cache (cold vs warm-memory vs
 warm-disk), whole-program fusion groups, the liveness-based VMEM memory
 planner (arena before/after reuse + the capacity-unlock speedup),
 Stripe-matmul kernel vs plain einsum (CPU wall time), per-arch reduced
@@ -30,6 +30,8 @@ from typing import Any, Dict, List
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import api
 
 RESULTS: List[Dict[str, Any]] = []
 
@@ -54,12 +56,10 @@ def bench_fig1_engineering_effort() -> None:
     """Fig 1: artifacts needed per approach for our 10 archs x 3 hw
     configs x K ops.  Stripe: ops + hw-configs; kernel library:
     ops x hw x versions."""
-    from repro import configs
-    from repro.core.hwconfig import REGISTRY
 
     n_ops = 4          # matmul, attention-score, gla-chunk, conv (frontend ops)
-    n_hw = len(REGISTRY)
-    n_arch = len(configs.names())
+    n_hw = len(api.HW_REGISTRY)
+    n_arch = len(api.configs.names())
     kernel_lib = n_ops * n_hw * n_arch          # per-op-per-hw-per-shape family
     schedule_space = n_ops * n_hw + n_ops       # spaces + algorithms
     stripe = n_ops + n_hw                       # algorithms + configs
@@ -69,23 +69,19 @@ def bench_fig1_engineering_effort() -> None:
 
 
 def bench_fig4_autotile() -> None:
-    from repro.core.cost import evaluate_tiling
-    from repro.core.frontend import single_op_program
-    from repro.core.hwconfig import get_config
-    from repro.core.passes.autotile import choose_tiling
 
-    prog = single_op_program(
+    prog = api.single_op_program(
         "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
         {"I": ((12, 16, 8), "int8"), "F": ((3, 3, 8, 16), "int8"),
          "O": ((12, 16, 16), "int32")},
         out="O",
     )
     blk = prog.entry.stmts[0]
-    hw = get_config("paper_fig4")
+    hw = api.get_config("paper_fig4")
     params = dict(hw.passes[0][1])
-    ref = evaluate_tiling(blk, {"x": 3, "y": 4}, hw, params)
+    ref = api.evaluate_tiling(blk, {"x": 3, "y": 4}, hw, params)
     t0 = time.perf_counter()
-    tiles, best = choose_tiling(blk, hw, params)
+    tiles, best = api.choose_tiling(blk, hw, params)
     dt = (time.perf_counter() - t0) * 1e6
     emit("fig4_cost_fig5b_tiling", 0.0, f"{ref.cost:.6f}")
     emit("fig4_lines_per_tilepair", 0.0, f"{ref.lines / ref.n_tiles:.0f}")
@@ -97,12 +93,8 @@ def bench_fig5_rewrite() -> None:
     """Tiling-rewrite overhead + executable equivalence (reduced shape)."""
     import copy
 
-    from repro.core import execute_reference, single_op_program
-    from repro.core.hwconfig import get_config
-    from repro.core.lower_jnp import lower_program_jnp
-    from repro.core.passes import compile_program
 
-    prog = single_op_program(
+    prog = api.single_op_program(
         "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
         {"I": ((12, 16, 8), "float32"), "F": ((3, 3, 8, 16), "float32"),
          "O": ((12, 16, 16), "float32")},
@@ -110,15 +102,15 @@ def bench_fig5_rewrite() -> None:
     )
     src = copy.deepcopy(prog)
     t0 = time.perf_counter()
-    opt = compile_program(prog, get_config("cpu_test"))
+    opt = api.compile_program(prog, api.get_config("cpu_test"))
     dt_compile = (time.perf_counter() - t0) * 1e6
     rng = np.random.RandomState(0)
     arrays = {"I": rng.randn(12, 16, 8).astype(np.float32),
               "F": rng.randn(3, 3, 8, 16).astype(np.float32)}
-    a = execute_reference(src, arrays)["O"]
-    b = execute_reference(opt, arrays)["O"]
+    a = api.execute_reference(src, arrays)["O"]
+    b = api.execute_reference(opt, arrays)["O"]
     equal = bool(np.allclose(a, b, rtol=1e-4, atol=1e-5))
-    fn = jax.jit(lambda d: lower_program_jnp(opt.source)(d)["O"])
+    fn = jax.jit(lambda d: api.lower_program_jnp(opt.source)(d)["O"])
     dt_exec = _timeit(fn, {k: jnp.asarray(v) for k, v in arrays.items()})
     emit("fig5_pass_pipeline_compile", dt_compile, 1)
     emit("fig5_semantics_preserved", 0.0, int(equal))
@@ -126,15 +118,13 @@ def bench_fig5_rewrite() -> None:
 
 
 def bench_stripe_jit_cache() -> None:
-    """Tentpole metric: warm vs cold ``stripe_jit`` compile of the Fig. 5
+    """Tentpole metric: warm vs cold ``api.stripe_jit`` compile of the Fig. 5
     conv — in-memory hit and cross-process (disk tiling replay) warm."""
     import tempfile
 
-    from repro.core import CompilationCache, single_op_program, stripe_jit
-    from repro.core.hwconfig import get_config
 
     def conv():
-        return single_op_program(
+        return api.single_op_program(
             "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
             {"I": ((12, 16, 8), "float32"), "F": ((3, 3, 8, 16), "float32"),
              "O": ((12, 16, 16), "float32")},
@@ -142,17 +132,17 @@ def bench_stripe_jit_cache() -> None:
         )
 
     with tempfile.TemporaryDirectory() as d:
-        cache = CompilationCache(disk_dir=d)
+        cache = api.CompilationCache(disk_dir=d)
         t0 = time.perf_counter()
-        stripe_jit(conv(), get_config("cpu_test"), cache=cache)
+        api.stripe_jit(conv(), api.get_config("cpu_test"), cache=cache)
         cold = time.perf_counter() - t0
         t0 = time.perf_counter()
-        stripe_jit(conv(), get_config("cpu_test"), cache=cache)
+        api.stripe_jit(conv(), api.get_config("cpu_test"), cache=cache)
         warm_mem = time.perf_counter() - t0
         # fresh cache instance over the same disk dir = a new process
-        cache2 = CompilationCache(disk_dir=d)
+        cache2 = api.CompilationCache(disk_dir=d)
         t0 = time.perf_counter()
-        cp = stripe_jit(conv(), get_config("cpu_test"), cache=cache2)
+        cp = api.stripe_jit(conv(), api.get_config("cpu_test"), cache=cache2)
         warm_disk = time.perf_counter() - t0
         assert cp.record.disk_hit
     emit("stripe_jit_compile_cold", cold * 1e6, 1)
@@ -164,10 +154,9 @@ def _fusion_chain_prog(act_ops):
     """matmul -> bias -> <act chain> -> matmul on wide activations with a
     skinny contraction dim, so intermediate-tensor traffic (what fusion
     eliminates) dominates compute."""
-    from repro.core import TileProgram
 
     m, k, n, n2 = 1024, 8, 4096, 8
-    tp = TileProgram("fusion_bench")
+    tp = api.TileProgram("fusion_bench")
     tp.input("A", (m, k))
     tp.input("B", (k, n))
     tp.input("b", (n,))
@@ -195,9 +184,6 @@ def _fusion_measure(prog):
     bursts across both paths."""
     import copy
 
-    from repro.core import stripe_jit
-    from repro.core.hwconfig import get_config
-    from repro.core.lower_jnp import lower_program_jnp
 
     semantic = copy.deepcopy(prog)
     # CPU parameterization: prologue-preferred grouping ends each group's
@@ -205,10 +191,10 @@ def _fusion_measure(prog):
     # library path (the default epilogue grouping is the right shape for
     # the Pallas/TPU backend, which applies epilogues on the accumulator
     # tile).
-    hw_cpu = get_config("tpu_v5e").with_params(**{"fuse.prefer": "prologue"})
-    compiled = stripe_jit(copy.deepcopy(prog), hw_cpu, backend="jnp")
-    unfused_fn = lower_program_jnp(semantic, groups=None, jit_scope="op")
-    fused_fn = lower_program_jnp(semantic, groups=compiled.record.groups,
+    hw_cpu = api.get_config("tpu_v5e").with_params(**{"fuse.prefer": "prologue"})
+    compiled = api.stripe_jit(copy.deepcopy(prog), hw_cpu, backend="jnp")
+    unfused_fn = api.lower_program_jnp(semantic, groups=None, jit_scope="op")
+    fused_fn = api.lower_program_jnp(semantic, groups=compiled.record.groups,
                                  jit_scope="group")
     rng = np.random.RandomState(0)
     arrays = {nm: jnp.asarray(rng.randn(*semantic.buffers[nm].shape), jnp.float32)
@@ -249,8 +235,6 @@ def bench_fusion() -> None:
     fusion groups -> 2 pallas_calls)."""
     import copy
 
-    from repro.core import stripe_jit
-    from repro.core.hwconfig import get_config
 
     gelu_prog = _fusion_chain_prog(["gelu"])
     semantic = copy.deepcopy(gelu_prog)
@@ -265,7 +249,7 @@ def bench_fusion() -> None:
     emit("fusion_relu2_fused_groups", t_f2, n_f2)
     emit("fusion_speedup", 0.0, f"{t_u2 / t_f2:.2f}x")
 
-    pallas = stripe_jit(semantic, get_config("tpu_v5e"), backend="pallas", interpret=True)
+    pallas = api.stripe_jit(semantic, api.get_config("tpu_v5e"), backend="pallas", interpret=True)
     emit("fusion_pallas_kernels", 0.0,
          f"\"{n_u}->{pallas.record.n_kernels} "
          f"(backend={pallas.record.backend})\"")
@@ -291,22 +275,16 @@ def bench_memplan() -> None:
     rounds) quantifies the unlock."""
     import copy
 
-    from repro.core import TileProgram, stripe_jit
-    from repro.core.cost import score_pass_trace
-    from repro.core.driver import compile_cached
-    from repro.core.hwconfig import get_config
-    from repro.core.lower_jnp import lower_program_jnp
-    from repro.explore.workloads import get_workloads
 
     # ---- part 1: default-corpus arena peaks (planner vs bump) -------------
     # read from the schedule pass's report: the planner's per-block arena
     # vs the legacy bump model priced on the same views (NOT the score's
     # vmem_peak_bytes, which also floors at the autotile tile footprint)
-    hw0 = get_config("tpu_v5e")
-    workloads = get_workloads("default")
+    hw0 = api.get_config("tpu_v5e")
+    workloads = api.get_workloads("default")
     lower = 0
     for w in workloads:
-        _, rec = compile_cached(w.build(), hw0, use_disk=False)
+        _, rec = api.compile_cached(w.build(), hw0, use_disk=False)
         sched = [r for e in rec.pass_trace if e[0] == "schedule"
                  for r in e[2] if isinstance(r, dict)]
         planner_peak = max((r.get("arena_bytes", 0) for r in sched), default=0)
@@ -320,7 +298,7 @@ def bench_memplan() -> None:
     m, n, n2 = 1024, 4096, 32
 
     def chain():
-        tp = TileProgram("memplan_chain")
+        tp = api.TileProgram("memplan_chain")
         tp.input("X", (m, n))
         tp.input("W2", (n, n2))
         tp.temp("Y1", (m, n))
@@ -336,14 +314,14 @@ def bench_memplan() -> None:
     # cap = 0.29 * 16 MiB = 4.87 MB sits between the planner's exact
     # pressure of the chain-inline trial (~4.6 MB: W2 resident, one
     # accumulator slot) and the legacy 2x rule (~5.06 MB)
-    hw = (get_config("tpu_v5e").with_mem("VMEM", size_bytes=16 * 2**20)
+    hw = (api.get_config("tpu_v5e").with_mem("VMEM", size_bytes=16 * 2**20)
           .with_params(**{"autotile.mem_cap_frac": 0.29,
                           "fuse.mem_cap_frac": 0.29}))
     legacy = hw.with_params(**{"fuse.memplan": False, "autotile.memplan": False,
                                "schedule.memplan": False})
     recs = {}
     for name, cfg in (("planner", hw), ("legacy", legacy)):
-        c = stripe_jit(chain(), cfg, backend="jnp", use_disk=False)
+        c = api.stripe_jit(chain(), cfg, backend="jnp", use_disk=False)
         recs[name] = c.record
     assert recs["planner"].n_kernels == 1 and recs["legacy"].n_kernels == 4
 
@@ -360,8 +338,8 @@ def bench_memplan() -> None:
     # the planner's (larger) tile was infeasible under the legacy 2x rule
     assert mm_p["mem_bytes"] > mm_l["mem_bytes"]
     assert 2 * mm_p["mem_bytes"] > cap >= mm_p["plan_bytes"]
-    lat_p = score_pass_trace(recs["planner"].pass_trace).latency_s
-    lat_l = score_pass_trace(recs["legacy"].pass_trace).latency_s
+    lat_p = api.score_pass_trace(recs["planner"].pass_trace).latency_s
+    lat_l = api.score_pass_trace(recs["legacy"].pass_trace).latency_s
     emit("memplan_tiles_planner", 0.0, f"\"{mm_p['tiles']} ({mm_p['mem_bytes']}B)\"")
     emit("memplan_tiles_legacy", 0.0, f"\"{mm_l['tiles']} ({mm_l['mem_bytes']}B)\"")
     emit("memplan_pred_speedup", 0.0, f"{lat_l / lat_p:.2f}x")
@@ -370,9 +348,9 @@ def bench_memplan() -> None:
     rng = np.random.RandomState(0)
     arrays = {"X": jnp.asarray(rng.randn(m, n), jnp.float32),
               "W2": jnp.asarray(rng.randn(n, n2), jnp.float32)}
-    fn_p = lower_program_jnp(copy.deepcopy(prog), groups=recs["planner"].groups,
+    fn_p = api.lower_program_jnp(copy.deepcopy(prog), groups=recs["planner"].groups,
                              jit_scope="group")
-    fn_l = lower_program_jnp(copy.deepcopy(prog), groups=recs["legacy"].groups,
+    fn_l = api.lower_program_jnp(copy.deepcopy(prog), groups=recs["legacy"].groups,
                              jit_scope="group")
     a = np.asarray(fn_p(arrays)["O"])
     b = np.asarray(fn_l(arrays)["O"])
@@ -414,19 +392,16 @@ def bench_conv() -> None:
       ``CompileRecord.block_backends``."""
     import copy
 
-    from repro.core import TileProgram, execute_reference, stripe_jit
-    from repro.core.frontend import single_op_program
-    from repro.core.hwconfig import get_config
-    from repro.explore.workloads import fig4_conv, fig5_conv_f32
 
-    hw = get_config("tpu_v5e")
+    hw = api.get_config("tpu_v5e")
     rng = np.random.RandomState(0)
 
     # ---- fig4/fig5 through pallas-interpret, asserted vs the reference ----
-    for build, name in ((fig4_conv, "fig4"), (fig5_conv_f32, "fig5")):
+    for build, name in ((api.explore.workloads.fig4_conv, "fig4"),
+                        (api.explore.workloads.fig5_conv_f32, "fig5")):
         prog = build()
         src = copy.deepcopy(prog)
-        c = stripe_jit(prog, hw, backend="pallas", interpret=True, use_disk=False)
+        c = api.stripe_jit(prog, hw, backend="pallas", interpret=True, use_disk=False)
         assert c.record.backend == "pallas", c.record.fallback_reasons()
         assert c.record.n_kernels >= 1
         ins = {}
@@ -436,7 +411,7 @@ def bench_conv() -> None:
                       if d.dtype == "int8"
                       else rng.randn(*d.shape).astype(np.float32))
         got = np.asarray(c(ins)["O"])
-        want = execute_reference(src, ins)["O"]
+        want = api.execute_reference(src, ins)["O"]
         if want.dtype.kind in "iu":
             assert (got == want).all(), "int8 conv must be bit-exact"
         else:
@@ -446,14 +421,14 @@ def bench_conv() -> None:
 
     # ---- measured: kernelized conv vs the jnp fallback it replaces --------
     x, y, ci, co = 96, 96, 16, 16
-    prog = single_op_program(
+    prog = api.single_op_program(
         "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
         {"I": ((x, y, ci), "float32"), "F": ((3, 3, ci, co), "float32"),
          "O": ((x, y, co), "float32")}, out="O", name="conv_serving")
-    pal = stripe_jit(copy.deepcopy(prog), hw, backend="pallas",
+    pal = api.stripe_jit(copy.deepcopy(prog), hw, backend="pallas",
                      interpret=True, use_disk=False)
     assert pal.record.backend == "pallas", pal.record.fallback_reasons()
-    ref = stripe_jit(copy.deepcopy(prog), hw, backend="jnp", use_disk=False)
+    ref = api.stripe_jit(copy.deepcopy(prog), hw, backend="jnp", use_disk=False)
     ins = {"I": jnp.asarray(rng.randn(x, y, ci), jnp.float32),
            "F": jnp.asarray(rng.randn(3, 3, ci, co), jnp.float32)}
     pf = jax.jit(lambda a: pal(a)["O"])
@@ -476,7 +451,7 @@ def bench_conv() -> None:
     emit("conv_measured_speedup", 0.0, f"{min(t_j) / min(t_p):.2f}x")
 
     # ---- hybrid: mixed program keeps its kernels --------------------------
-    tp = TileProgram("conv_mixed")
+    tp = api.TileProgram("conv_mixed")
     tp.input("I", (24, 24, 8))
     tp.input("F", (3, 3, 8, 16))
     tp.input("W", (16, 32))
@@ -488,7 +463,7 @@ def bench_conv() -> None:
     tp.op("M[x, y] max= C[x, y, k]", name="headmax")  # no Pallas path
     mixed = tp.build()
     src = copy.deepcopy(mixed)
-    hy = stripe_jit(mixed, hw, backend="pallas", interpret=True, use_disk=False)
+    hy = api.stripe_jit(mixed, hw, backend="pallas", interpret=True, use_disk=False)
     rec = hy.record
     assert rec.backend == "pallas"
     assert rec.block_backends.get("headmax") == "jnp"
@@ -498,7 +473,7 @@ def bench_conv() -> None:
            "F": rng.randn(3, 3, 8, 16).astype(np.float32),
            "W": rng.randn(16, 32).astype(np.float32)}
     got = hy(ins)
-    want = execute_reference(src, ins)
+    want = api.execute_reference(src, ins)
     for out in ("O", "M"):
         assert np.allclose(np.asarray(got[out]), want[out], rtol=1e-3, atol=1e-3)
     n_jnp = sum(1 for b in rec.block_backends.values() if b == "jnp")
@@ -508,14 +483,13 @@ def bench_conv() -> None:
 
 
 def bench_stripe_matmul() -> None:
-    from repro.kernels.stripe_matmul.ops import matmul, matmul_ref
 
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(256, 512), jnp.float32)
     w = jnp.asarray(rng.randn(512, 384), jnp.float32)
-    t_ref = _timeit(jax.jit(lambda a, b: matmul_ref(a, b)), x, w)
-    got = matmul(x, w, interpret=True)
-    err = float(jnp.max(jnp.abs(got - matmul_ref(x, w))))
+    t_ref = _timeit(jax.jit(lambda a, b: api.matmul_ref(a, b)), x, w)
+    got = api.matmul(x, w, interpret=True)
+    err = float(jnp.max(jnp.abs(got - api.matmul_ref(x, w))))
     emit("stripe_matmul_ref_xla", t_ref, 1)
     emit("stripe_matmul_pallas_interpret_maxerr", 0.0, f"{err:.2e}")
 
@@ -523,36 +497,32 @@ def bench_stripe_matmul() -> None:
 def bench_flash_attention_blocks() -> None:
     import tempfile
 
-    from repro.core import CompilationCache, set_default_cache
-    from repro.kernels.flash_attention.ops import choose_block_sizes
 
     # isolate from ~/.cache/stripe-repro so the "cold" rows are really cold
     with tempfile.TemporaryDirectory() as d:
-        set_default_cache(CompilationCache(disk_dir=d))
+        api.set_default_cache(api.CompilationCache(disk_dir=d))
         try:
             for s in (4096, 32768):
                 t0 = time.perf_counter()
-                bq, bk = choose_block_sizes(s, s, 128)
+                bq, bk = api.choose_block_sizes(s, s, 128)
                 dt = (time.perf_counter() - t0) * 1e6
                 emit(f"flash_attn_autotile_s{s}", dt, f"\"bq={bq} bk={bk}\"")
                 # second call: served from the compilation cache
                 t0 = time.perf_counter()
-                choose_block_sizes(s, s, 128)
+                api.choose_block_sizes(s, s, 128)
                 dt_warm = (time.perf_counter() - t0) * 1e6
                 emit(f"flash_attn_autotile_s{s}_cached", dt_warm, f"\"bq={bq} bk={bk}\"")
         finally:
-            set_default_cache(None)
+            api.set_default_cache(None)
 
 
 def bench_arch_steps() -> None:
-    from repro import configs
-    from repro.models.build import build_model, make_batch
 
-    for name in configs.names():
-        cfg = configs.get(name).scaled()
-        m = build_model(cfg)
+    for name in api.configs.names():
+        cfg = api.configs.get(name).scaled()
+        m = api.build_model(cfg)
         params = m.init(jax.random.PRNGKey(0))
-        batch = make_batch(cfg, "train", 2, 32)
+        batch = api.make_batch(cfg, "train", 2, 32)
         fn = jax.jit(lambda p, b: m.loss(p, b, remat=False)[0])
         dt = _timeit(fn, params, batch, n=3, warmup=1)
         emit(f"arch_train_step_reduced/{name}", dt, 1)
@@ -560,9 +530,8 @@ def bench_arch_steps() -> None:
 
 def bench_hillclimb() -> None:
     # the narrative lives in the explore subsystem now (one search impl)
-    from repro.explore.hillclimb import roofline_hillclimb
 
-    roofline_hillclimb(emit=emit)
+    api.roofline_hillclimb(emit=emit)
 
 
 def bench_explore() -> None:
@@ -572,21 +541,104 @@ def bench_explore() -> None:
     least one swept config beats stock predicted latency somewhere."""
     import tempfile
 
-    from repro.explore import dominating_baseline, get_space, pareto_front, run_sweep
 
     with tempfile.TemporaryDirectory() as d:
         t0 = time.perf_counter()
-        sweep = run_sweep(get_space("tpu-sweep"), "quick", budget=8,
+        sweep = api.run_sweep(api.get_space("tpu-sweep"), "quick", budget=8,
                           strategy="grid", cache_dir=d, measure_top_k=0)
         dt = (time.perf_counter() - t0) * 1e6
     n_dedup = sum(1 for p in sweep.points if p.dedup_of is not None)
-    n_dominating = sum(1 for v in dominating_baseline(sweep).values() if v)
+    n_dominating = sum(1 for v in api.dominating_baseline(sweep).values() if v)
     emit("explore_sweep_8pt", dt, f"\"points={len(sweep.points)} dedup={n_dedup}\"")
-    emit("explore_pareto_size", 0.0, len(pareto_front(sweep.points)))
+    emit("explore_pareto_size", 0.0, len(api.pareto_front(sweep.points)))
     emit("explore_workloads_dominating_baseline", 0.0, n_dominating)
     best = min(sweep.unique_points(), key=lambda p: p.latency_s)
     emit("explore_best_vs_baseline_predicted", 0.0,
          f"{sweep.baseline.latency_s / max(best.latency_s, 1e-30):.2f}x")
+
+
+def bench_serving() -> None:
+    """Serving smoke: ~100 synthetic requests (Poisson arrival stamps,
+    mixed prompt lengths) through the continuous-batching engine vs the
+    wave baseline at equal slot count, on a reduced dense LM.
+
+    Two legs:
+
+    * **parity** — uniform prompt length (the wave engine left-pads
+      without masking, so mixed lengths are not numerically comparable),
+      asserting *identical output tokens* from both engines;
+    * **traffic** — 100 mixed-length requests queued per Poisson arrival
+      order, reporting tokens/s, p50/p99 request completion latency and
+      slot utilization for each engine.  Both engines are warmed on a
+      throwaway request set first so the leg measures steady-state
+      serving, not jit/stripe compile time (cold-boot cost is the
+      compile-cache warm-start story, reported by ``compile_log()``).
+    """
+    cfg = api.configs.get("llama3-8b").scaled(
+        d_model=64, n_layers=2, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab=97, dtype="float32")
+    model = api.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    slots, max_len = 4, 64
+    rng = np.random.RandomState(0)
+
+    # ---- parity leg: identical tokens, wave vs continuous -----------------
+    prompts = [rng.randint(1, cfg.vocab, size=6).astype(np.int32)
+               for _ in range(2 * slots)]
+    cont = api.ServingEngine(
+        model, api.EngineConfig(slots=slots, max_len=max_len, page_size=8))
+    wave = api.WaveEngine(model, slots, max_len)
+    for i, p in enumerate(prompts):
+        for eng in (cont, wave):
+            eng.submit(api.Request(uid=i, prompt=p.copy(),
+                                   sampling=api.SamplingParams(max_new_tokens=8)))
+    got_c = {r.uid: r.out_tokens for r in cont.run(params, max_steps=10_000)}
+    got_w = {r.uid: r.out_tokens for r in wave.run(params, max_steps=10_000)}
+    assert got_c == got_w, "continuous engine diverged from the wave baseline"
+    rec = cont.compile_records()["decode/mlp"]
+    emit("serving_parity_requests", 0.0, len(got_c))
+    emit("serving_decode_stripe_kernels", 0.0,
+         f"\"mlp={rec.n_kernels} groups={len(rec.groups)}\"")
+
+    # ---- traffic leg: 100 mixed-length requests, Poisson arrivals ---------
+    n_req = 100
+
+    def mixed_requests(seed=7, base_uid=0):
+        r = np.random.RandomState(seed)
+        arrivals = np.cumsum(r.exponential(1.0, size=n_req))  # Poisson process
+        reqs = []
+        for i in range(n_req):
+            plen = int(r.choice([4, 8, 16, 24]))
+            new = int(r.randint(4, 17))
+            reqs.append((arrivals[i], api.Request(
+                uid=base_uid + i,
+                prompt=r.randint(1, cfg.vocab, size=plen).astype(np.int32),
+                sampling=api.SamplingParams(max_new_tokens=new))))
+        return reqs
+
+    for label, eng in (
+            ("continuous", api.ServingEngine(
+                model, api.EngineConfig(slots=slots, max_len=max_len, page_size=8))),
+            ("wave", api.WaveEngine(model, slots, max_len))):
+        # warm-up pass (compiles every bucket), then the timed run
+        for _, r in mixed_requests(seed=1, base_uid=10_000):
+            eng.submit(r)
+        eng.run(params, max_steps=100_000)
+        reqs = mixed_requests()
+        t0 = time.perf_counter()
+        for _, r in reqs:  # arrival order; all queued (closed-loop smoke)
+            eng.submit(r)
+        done = eng.run(params, max_steps=100_000)
+        wall = time.perf_counter() - t0
+        assert len(done) == n_req, f"{label}: {len(done)}/{n_req} finished"
+        toks = sum(len(r.out_tokens) for r in done)
+        lats = np.sort([r.finish_time - t0 for r in done])
+        p50, p99 = lats[int(0.50 * n_req)], lats[int(0.99 * n_req)]
+        util = (eng.metrics()["slot_utilization"]
+                if isinstance(eng, api.ServingEngine) else float("nan"))
+        emit(f"serving_{label}_tok_per_s", wall / max(toks, 1) * 1e6,
+             f"\"{toks / wall:.0f} tok/s p50={p50:.2f}s p99={p99:.2f}s "
+             f"util={util:.2f}\"")
 
 
 BENCHES = {
@@ -598,6 +650,7 @@ BENCHES = {
     "memplan": bench_memplan,
     "conv": bench_conv,
     "explore": bench_explore,
+    "serving": bench_serving,
     "matmul": bench_stripe_matmul,
     "flash": bench_flash_attention_blocks,
     "hillclimb": bench_hillclimb,

@@ -7,16 +7,13 @@ interpret mode.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import single_op_program
-from repro.core.hwconfig import get_config
-from repro.core.passes import get_pass
-from repro.core.tiling import split_block
+from repro import api
 
 
 def fig5_rewrite():
     print("=" * 70)
     print("Paper Fig. 5: conv tiling rewrite (3x4x16 output tile)")
-    prog = single_op_program(
+    prog = api.single_op_program(
         "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]",
         {"I": ((12, 16, 8), "int8"), "F": ((3, 3, 8, 16), "int8"),
          "O": ((12, 16, 16), "int32")},
@@ -25,7 +22,7 @@ def fig5_rewrite():
     blk = prog.entry.stmts[0]
     print("--- before (Fig. 5a) ---")
     print(blk.pretty())
-    tiled = split_block(blk, {"x": 3, "y": 4})
+    tiled = api.split_block(blk, {"x": 3, "y": 4})
     print("--- after (Fig. 5b): note I view 5x6x8 at [3x-1, 4y-1, 0] ---")
     print(tiled.pretty())
 
@@ -33,15 +30,15 @@ def fig5_rewrite():
 def pass_by_pass():
     print("=" * 70)
     print("TPU pipeline, pass by pass, on a 512^3 matmul")
-    prog = single_op_program(
+    prog = api.single_op_program(
         "O[i, j] += A[i, c] * B[c, j]",
         {"A": ((512, 512), "float32"), "B": ((512, 512), "float32"),
          "O": ((512, 512), "float32")},
         out="O",
     )
-    hw = get_config("tpu_v5e")
+    hw = api.get_config("tpu_v5e")
     for name, params in hw.passes:
-        prog = get_pass(name)(prog, hw, params)
+        prog = api.get_pass(name)(prog, hw, params)
         blocks = [s for s in prog.entry.stmts if hasattr(s, "tags")]
         tags = [sorted(t for t in b.tags if not t.startswith("sched")) for b in blocks]
         print(f"after {name:10s}: {len(blocks)} block(s), tags={tags}")
@@ -51,14 +48,12 @@ def pass_by_pass():
 def run_generated_kernel():
     print("=" * 70)
     print("Stripe-generated Pallas kernel (interpret mode)")
-    from repro.kernels.stripe_matmul.ops import matmul, matmul_ref
-
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(256, 512), jnp.float32)
     w = jnp.asarray(rng.randn(512, 384), jnp.float32)
     b = jnp.asarray(rng.randn(384), jnp.float32)
-    got = matmul(x, w, b, act="relu", interpret=True)
-    want = matmul_ref(x, w, b, act="relu")
+    got = api.matmul(x, w, b, act="relu", interpret=True)
+    want = api.matmul_ref(x, w, b, act="relu")
     print("max |err| vs oracle:", float(jnp.max(jnp.abs(got - want))))
 
 
@@ -68,19 +63,17 @@ def jit_with_cache():
     hit and skips the autotile search entirely."""
     import time
 
-    from repro.core import CompilationCache, stripe_jit
-
     print("=" * 70)
     print("stripe_jit: compile driver + persistent compilation cache")
-    cache = CompilationCache()  # disk at $STRIPE_CACHE_DIR or ~/.cache/stripe-repro
+    cache = api.CompilationCache()  # disk at $STRIPE_CACHE_DIR or ~/.cache/stripe-repro
     text = "O[x, y, k] += I[x + i - 1, y + j - 1, c] * F[i, j, c, k]"
     tensors = {"I": ((12, 16, 8), "float32"), "F": ((3, 3, 8, 16), "float32"),
                "O": ((12, 16, 16), "float32")}
     t0 = time.perf_counter()
-    compiled = stripe_jit(text, get_config("cpu_test"), tensors=tensors, out="O", cache=cache)
+    compiled = api.jit(text, api.get_config("cpu_test"), tensors=tensors, out="O", cache=cache)
     cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    stripe_jit(text, get_config("cpu_test"), tensors=tensors, out="O", cache=cache)
+    api.jit(text, api.get_config("cpu_test"), tensors=tensors, out="O", cache=cache)
     warm = time.perf_counter() - t0
     rng = np.random.RandomState(0)
     out = compiled({"I": rng.randn(12, 16, 8).astype(np.float32),

@@ -7,15 +7,12 @@ both backends.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import TileProgram, execute_reference, validate_program
-from repro.core.hwconfig import get_config
-from repro.core.lower_jnp import lower_program_jnp
-from repro.core.passes import compile_program
+from repro import api
 
 
 def main():
     # 1. A fused linear layer in the Tile language (paper §3.4).
-    tp = TileProgram("fused_linear")
+    tp = api.TileProgram("fused_linear")
     tp.input("X", (256, 512))
     tp.input("W", (512, 384))
     tp.input("B", (384,))
@@ -24,11 +21,11 @@ def main():
     tp.op("T[i, j] += X[i, c] * W[c, j]")
     tp.op("O[i, j] = relu(T[i, j] + B[j])")
     prog = tp.build()
-    assert validate_program(prog) == []          # Def. 2 holds
+    assert api.validate_program(prog) == []          # Def. 2 holds
 
     # 2. Compile with the TPU v5e hardware config: fuse -> autotile ->
     #    stencil -> boundary -> localize -> schedule.
-    optimized = compile_program(prog, get_config("tpu_v5e"))
+    optimized = api.compile_program(prog, api.get_config("tpu_v5e"))
     print("=== optimized Stripe IR ===")
     print(optimized.pretty())
 
@@ -40,7 +37,7 @@ def main():
         "W": jnp.asarray(rng.randn(512, 384), jnp.float32),
         "B": jnp.asarray(rng.randn(384), jnp.float32),
     }
-    out = lower_program_jnp(optimized.source)(arrays)["O"]
+    out = api.lower_program_jnp(optimized.source)(arrays)["O"]
     want = np.maximum(np.asarray(arrays["X"]) @ np.asarray(arrays["W"]) + np.asarray(arrays["B"]), 0)
     np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4, atol=1e-4)
     print("\njnp backend matches numpy: OK", out.shape)

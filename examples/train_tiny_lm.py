@@ -11,11 +11,7 @@ import argparse
 
 import jax
 
-from repro import configs
-from repro.data.pipeline import DataConfig
-from repro.models.build import build_model
-from repro.optim import adamw
-from repro.train.loop import TrainConfig, Trainer
+from repro import api
 
 
 def main():
@@ -28,16 +24,16 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     args = ap.parse_args()
 
-    cfg = configs.get(args.arch)
+    cfg = api.configs.get(args.arch)
     if not args.full:
         cfg = cfg.scaled(n_layers=4, d_model=128, d_ff=256 if cfg.d_ff else 0,
                          vocab=512, vocab_pad_multiple=64)
-    model = build_model(cfg)
-    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
-    opt = adamw.AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
-    tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
+    model = api.build_model(cfg)
+    data = api.DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+    opt = api.adamw.AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+    tc = api.TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
 
-    trainer = Trainer(model, opt, data, tc, rng=jax.random.PRNGKey(0))
+    trainer = api.Trainer(model, opt, data, tc, rng=jax.random.PRNGKey(0))
     print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M params) for {args.steps} steps")
     out = trainer.run()
     for h in out["history"]:

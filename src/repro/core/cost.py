@@ -565,7 +565,9 @@ def _classify_mnk(block: Block, eff: Mapping[str, int]):
     n_var = out_vars[-1]
     red = [v for v in eff if v not in out_vars]
     k = max((eff[v] for v in red), default=None)
+    # range-1 indexes are dropped from eff by the tiler; they still appear
+    # in the output ref (e.g. batch=1 decode), so default their extent to 1
     m = 1
     for v in out_vars[:-1]:
-        m *= eff[v]
-    return (m if out_vars[:-1] else None, eff[n_var], k)
+        m *= eff.get(v, 1)
+    return (m if out_vars[:-1] else None, eff.get(n_var, 1), k)

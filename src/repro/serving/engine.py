@@ -1,120 +1,512 @@
-"""Batched serving engine: wave-batched prefill + lockstep decode.
+"""Continuous-batching serving engine over a paged KV cache, with decode
+compiled through ``stripe_jit``.
 
-Requests are grouped into fixed-size waves; each wave's prompts are
-left-padded to a common length, prefilled in one jit'd call, then decoded
-in lockstep (one token per engine step for every sequence).  Finished
-sequences are masked out; the wave retires when all finish, and the next
-wave is admitted.  All shapes are static, so the prefill and decode steps
-compile exactly once per (batch, length) bucket.
+Architecture (one PR-sized tour; DESIGN.md §9 has the long form):
+
+* **Slots, not waves.**  The decode step always runs ``slots`` sequences;
+  a finished sequence is evicted *that step* and the freed slot is
+  refilled from the queue in the same admission phase, so the batch never
+  drains to let stragglers finish (the failure mode of
+  :class:`~repro.serving.wave.WaveEngine`).
+* **Paged KV** (:mod:`repro.serving.paged`): fixed-size pages in one
+  static physical store, a per-slot page table, pages recycled on
+  eviction.  Admission blocks only when the *pool* (not a dense
+  per-slot allocation) is exhausted.
+* **Stripe-compiled decode** (:mod:`repro.serving.stripe_decode`): the
+  dense blocks of both prefill and decode are Tile programs compiled
+  via ``stripe_jit`` — fusion grouping, memory planning, per-block
+  hybrid backend fallback — with every :class:`CompileRecord` surfaced
+  through :meth:`ServingEngine.compile_records`.
+* **Genuine compile buckets.**  Prefill compiles per power-of-two prompt
+  bucket; each bucket's compiled step is a *real entry* in the
+  :class:`~repro.core.cache.CompilationCache` keyed by a content hash,
+  so ``cache_stats()`` counts true bucket hit/miss traffic (the old
+  engine only logged buckets).  With a disk-backed cache the engine
+  writes a bucket *manifest* and warm-starts every previously seen
+  bucket at boot, while the stripe tilings replay from the on-disk
+  store.
+* **Async host prep.**  ``submit()`` hands the raw request to a
+  background thread that pads and buckets it while the device is busy
+  decoding; admission drains the prepared queue (deterministically —
+  single FIFO worker) at each step boundary.
+
+Public contract
+---------------
+``ServingEngine(model, EngineConfig(...))`` (or the legacy
+``ServingEngine(model, batch_slots=4, max_len=64)`` shim), then either
+
+* batch: ``engine.submit(Request(...)); finished = engine.run(params)``;
+* streaming: ``for uid, tok in engine.generate(prompts, params=params)``.
+
+Greedy decoding only (``SamplingParams.temperature == 0.0``); a request's
+``out_tokens`` includes the token emitted by its prefill step.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
-from typing import Any, Dict, List, Optional
+from collections import deque
+from typing import Any, Deque, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import cache as stripe_cache
+from ..core.driver import CompileRecord
+from ..core.hwconfig import get_config as _get_hw
+from .paged import PagePool, init_pages, make_decode_step, make_prefill_step, pages_needed
+from .request import EngineConfig, Request, SamplingParams
+from .stripe_decode import EngineLikeConfig, build_programs
+from .wave import WaveEngine  # re-exported: the legacy engine lives on as the baseline
+
+__all__ = ["ServingEngine", "WaveEngine", "Request", "SamplingParams", "EngineConfig"]
+
+_STOP = object()
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 @dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray  # (plen,) int32
-    max_new_tokens: int = 16
-    eos_id: int = -1  # -1: never
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class _Prepared:
+    """A request after host-side prep (padding + bucketing), ready to admit."""
+
+    req: Request
+    order: int
+    plen: int
+    bucket: int
+    tokens: np.ndarray  # (1, bucket) int32, right-padded
+    n_pages: int
+    eff_new: int        # max_new_tokens clipped to what max_len can hold
 
 
 class ServingEngine:
-    def __init__(self, model, batch_slots: int, max_len: int,
-                 compile_cache: Optional[stripe_cache.CompilationCache] = None):
+    """Continuous-batching engine; see module docstring for the contract."""
+
+    def __init__(self, model, config: Optional[EngineConfig] = None,
+                 max_len: Optional[int] = None, *,
+                 batch_slots: Optional[int] = None,
+                 compile_cache: Optional[stripe_cache.CompilationCache] = None,
+                 params: Any = None):
+        # Legacy shim: ServingEngine(model, 4, 64) and
+        # ServingEngine(model, batch_slots=4, max_len=64) both still work.
+        if isinstance(config, int):
+            batch_slots, config = config, None
+        if config is None:
+            config = EngineConfig(
+                slots=batch_slots if batch_slots is not None else 8,
+                max_len=max_len if max_len is not None else 256)
+        config.validate()
         self.model = model
         self.cfg = model.cfg
-        self.slots = batch_slots
-        self.max_len = max_len
-        self._queue: List[Request] = []
-        self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(model.prefill)
-        # per-(slots, prompt-length) bucket compile log: jax.jit compiles
-        # once per static shape; the compilation cache tracks which buckets
-        # are warm and how long each cold bucket's first trace took, so the
-        # serving path reports real hit/miss traffic.
+        if getattr(self.cfg, "family", "dense") != "dense" or \
+                getattr(self.cfg, "frontend", "none") != "none":
+            raise ValueError(
+                f"ServingEngine serves dense-attention LMs (family='dense', "
+                f"frontend='none'); got family={self.cfg.family!r} "
+                f"frontend={self.cfg.frontend!r}. Use WaveEngine for other families.")
+        self.config = config
+        self.slots = config.slots
+        self.max_len = config.max_len
+        self._params = params
+
         self._compile_cache = (compile_cache if compile_cache is not None
-                               else stripe_cache.CompilationCache(capacity=64, use_disk=False))
+                               else stripe_cache.CompilationCache(
+                                   capacity=256, use_disk=config.use_disk_cache))
+        self._jc = EngineLikeConfig(
+            hw=_get_hw(config.hw), backend=config.backend,
+            interpret=config.interpret,
+            use_disk=self._compile_cache.disk_dir is not None,
+            cache=self._compile_cache)
+
+        # ---- paged KV state (static shapes; see paged.py for the layout)
+        self._ps = config.page_size
+        self._pps = config.pages_per_slot
+        self._kv_window = self._pps * self._ps
+        self._pool = PagePool(config.pool_pages, self.slots)
+        self._pk, self._pv = init_pages(self.cfg, self._pool.total_pages, self._ps)
+        self._garbage = np.array(
+            [self._pool.garbage_page(s) for s in range(self.slots)], np.int32)
+        self._page_table = np.tile(self._garbage[:, None], (1, self._pps)).astype(np.int32)
+        self._pos = np.zeros(self.slots, np.int32)
+        self._last = np.zeros(self.slots, np.int32)
+        self._slot_req: List[Optional[Request]] = [None] * self.slots
+        self._slot_pages: List[List[int]] = [[] for _ in range(self.slots)]
+        self._slot_eff = np.zeros(self.slots, np.int64)
+        self._free_slots = list(range(self.slots))
+
+        # ---- compile identity: content keys shared across engine instances
+        self._model_fp = stripe_cache.stable_hash(dataclasses.asdict(self.cfg))
+        self._manifest_key = stripe_cache.content_key(
+            "serve_manifest", self._model_fp, self._ps, self._pps,
+            config.backend, config.use_stripe_decode)
+        self._records: Dict[str, CompileRecord] = {}
         self._compile_log: List[Dict[str, Any]] = []
+        self._build_decode()
 
+        # ---- async prep: submit() -> raw queue -> FIFO worker -> ready deque
+        self._raw: "queue.Queue" = queue.Queue()
+        self._ready: Deque[_Prepared] = deque()
+        self._cond = threading.Condition()
+        self._n_submitted = 0
+        self._n_prepared = 0
+        self._order = 0
+        self._prep_thread: Optional[threading.Thread] = None
+
+        # ---- bookkeeping
+        self._next_uid = 0
+        self._events: List[Dict[str, Any]] = []
+        self._finished: List[Request] = []
+        self._steps = 0
+        self._live_steps = 0
+        self._tokens_out = 0
+        self._warmed = False
+        self._decode_warm = False
+
+    # ------------------------------------------------------------- compile
+    def _build_decode(self) -> None:
+        """Compile (or fetch) the decode-step programs + jitted step.
+
+        The entry is a genuine compilation-cache record keyed by model
+        fingerprint and engine geometry, so a second engine over the same
+        model reuses the live compiled step (a memory hit in
+        ``cache_stats()``)."""
+        key = stripe_cache.content_key(
+            "serve_decode", self._model_fp, self.slots, self._ps, self._pps,
+            self.config.backend, self.config.interpret, self.config.use_stripe_decode)
+        hit = self._compile_cache.get_memory(key)
+        if hit is None:
+            t0 = time.perf_counter()
+            progs = (build_programs(self.cfg, self.slots, self._jc,
+                                    kv_window=self._kv_window)
+                     if self.config.use_stripe_decode else None)
+            fn = jax.jit(make_decode_step(self.cfg, progs, self._ps))
+            hit = (fn, progs)
+            self._compile_cache.put_memory(key, hit)
+            self._compile_log.append({
+                "kind": "decode_programs", "slots": self.slots,
+                "kv_window": self._kv_window,
+                "first_call_s": time.perf_counter() - t0})
+        self._decode_fn, self._decode_progs = hit
+        if self._decode_progs is not None:
+            self._records.update(
+                {f"decode/{k}": v for k, v in self._decode_progs.records.items()})
+
+    def _prefill_key(self, bucket: int) -> str:
+        return stripe_cache.content_key(
+            "serve_prefill", self._model_fp, self._ps, self._pps, bucket,
+            self.config.backend, self.config.interpret, self.config.use_stripe_decode)
+
+    def _get_prefill(self, bucket: int, params, warm: bool = False):
+        """Fetch-or-compile the prefill step for one prompt bucket.
+
+        Every admission routes through this lookup, so bucket traffic is
+        counted by the compilation cache for real (``cache_stats()``), and
+        every new bucket is added to the on-disk manifest for the next
+        boot's warm start."""
+        key = self._prefill_key(bucket)
+        fn = self._compile_cache.get_memory(key)
+        if fn is not None:
+            return fn
+        t0 = time.perf_counter()
+        progs = (build_programs(self.cfg, bucket, self._jc)
+                 if self.config.use_stripe_decode else None)
+        fn = jax.jit(make_prefill_step(self.cfg, progs, self._ps, bucket))
+        if progs is not None:
+            self._records.update(
+                {f"prefill_L{bucket}/{k}": v for k, v in progs.records.items()})
+        # trace + compile now (dummy call into the slot-0 garbage page,
+        # result discarded) so the admission that triggered this pays the
+        # whole cost here, visibly, and later admissions are warm.
+        row = np.full(self._pps, self._garbage[0], np.int32)
+        out = fn(params, jnp.zeros((1, bucket), jnp.int32), jnp.int32(1),
+                 jnp.asarray(row), self._pk, self._pv)
+        jax.block_until_ready(out)
+        self._compile_cache.put_memory(key, fn)
+        self._compile_log.append({
+            "kind": "prefill", "bucket": bucket, "slots": 1, "plen": bucket,
+            "first_call_s": time.perf_counter() - t0, "warm_start": warm})
+        self._touch_manifest(bucket)
+        return fn
+
+    def _touch_manifest(self, bucket: int) -> None:
+        if self._compile_cache.disk_dir is None:
+            return
+        payload = self._compile_cache.get_disk(self._manifest_key) or {}
+        buckets = sorted(set(payload.get("buckets", [])) | {int(bucket)})
+        self._compile_cache.put_disk(self._manifest_key, {"buckets": buckets})
+
+    def _warm_start(self, params) -> None:
+        """At boot (first serve), replay the on-disk bucket manifest:
+        every previously seen prefill bucket compiles now — with stripe
+        tilings replayed from the disk cache — instead of stalling the
+        first admission that needs it."""
+        if self._warmed:
+            return
+        self._warmed = True
+        if self._compile_cache.disk_dir is None:
+            return
+        payload = self._compile_cache.get_disk(self._manifest_key)
+        if not payload:
+            return
+        buckets = [int(b) for b in payload.get("buckets", [])]
+        for b in buckets:
+            if b <= self.max_len:
+                self._get_prefill(b, params, warm=True)
+        self._events.append({"step": self._steps, "event": "warm_start",
+                             "buckets": buckets})
+
+    # ----------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
-        self._queue.append(req)
+        """Enqueue a request.  Validation is synchronous (raises here);
+        padding/bucketing happens on the prep thread."""
+        req.submit_time = time.perf_counter()
+        plen = int(req.prompt.size)
+        if plen > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {plen} > max_len {self.max_len}")
+        eff = min(req.sampling.max_new_tokens, self.max_len - plen + 1)
+        if pages_needed(plen, eff, self._ps) > self._pool.pool_pages:
+            raise ValueError(
+                f"request {req.uid}: needs more pages than the whole pool "
+                f"({self._pool.pool_pages}); raise EngineConfig.pages")
+        self._next_uid = max(self._next_uid, req.uid + 1)
+        self._ensure_prep_thread()
+        self._n_submitted += 1
+        self._events.append({"step": self._steps, "event": "enqueue", "uid": req.uid})
+        self._raw.put(req)
 
+    def _ensure_prep_thread(self) -> None:
+        if self._prep_thread is None or not self._prep_thread.is_alive():
+            self._prep_thread = threading.Thread(
+                target=self._prep_loop, daemon=True, name="serve-prep")
+            self._prep_thread.start()
+
+    def _prep_loop(self) -> None:
+        while True:
+            item = self._raw.get()
+            if item is _STOP:
+                return
+            prep = self._prepare(item)
+            with self._cond:
+                self._ready.append(prep)
+                self._n_prepared += 1
+                self._cond.notify_all()
+
+    def _prepare(self, req: Request) -> _Prepared:
+        plen = int(req.prompt.size)
+        bucket = max(plen, min(_next_pow2(plen), self.max_len))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        eff = min(req.sampling.max_new_tokens, self.max_len - plen + 1)
+        order, self._order = self._order, self._order + 1
+        return _Prepared(req=req, order=order, plen=plen, bucket=bucket,
+                         tokens=toks, n_pages=pages_needed(plen, eff, self._ps),
+                         eff_new=eff)
+
+    def _drain_prep(self) -> None:
+        """Barrier: wait until everything submitted so far is prepared.
+        Keeps admission deterministic (pure arrival order) while the
+        actual padding work overlapped with the previous device steps."""
+        with self._cond:
+            while self._n_prepared < self._n_submitted:
+                if not self._cond.wait(timeout=10.0):
+                    if self._prep_thread is None or not self._prep_thread.is_alive():
+                        raise RuntimeError("serving prep thread died")
+
+    def close(self) -> None:
+        """Stop the prep thread (idempotent; the engine stays usable —
+        a later submit() restarts it)."""
+        if self._prep_thread is not None and self._prep_thread.is_alive():
+            self._raw.put(_STOP)
+            self._prep_thread.join(timeout=5.0)
+        self._prep_thread = None
+
+    def _pick_candidate(self) -> Optional[int]:
+        """Index into ``self._ready`` of the next request to admit, or
+        None if nothing admissible (fcfs: strict head-of-line; sjf:
+        shortest total job among prepared requests that fits)."""
+        if not self._ready:
+            return None
+        if self.config.admission == "fcfs":
+            return 0 if self._pool.can_alloc(self._ready[0].n_pages) else None
+        best: Optional[Tuple[Tuple[int, int], int]] = None
+        for i, p in enumerate(self._ready):
+            if not self._pool.can_alloc(p.n_pages):
+                continue
+            k = (p.plen + p.eff_new, p.order)
+            if best is None or k < best[0]:
+                best = (k, i)
+        return None if best is None else best[1]
+
+    def _admit(self, params) -> List[Tuple[int, int]]:
+        """Fill free slots from the prepared queue; returns the
+        (uid, first_token) pairs emitted by the prefills."""
+        emitted: List[Tuple[int, int]] = []
+        self._drain_prep()
+        while self._free_slots:
+            with self._cond:
+                idx = self._pick_candidate()
+                if idx is None:
+                    break
+                prep = self._ready[idx]
+                del self._ready[idx]
+            pages = self._pool.alloc(prep.n_pages)
+            assert pages is not None  # _pick_candidate checked can_alloc
+            slot = self._free_slots.pop(0)
+            r = prep.req
+            r.slot = slot
+            row = np.full(self._pps, self._garbage[slot], np.int32)
+            row[: len(pages)] = pages
+            self._page_table[slot] = row
+            self._slot_pages[slot] = pages
+            self._slot_req[slot] = r
+            self._slot_eff[slot] = prep.eff_new
+            fn = self._get_prefill(prep.bucket, params)
+            tok, self._pk, self._pv = fn(
+                params, jnp.asarray(prep.tokens), jnp.int32(prep.plen),
+                jnp.asarray(row), self._pk, self._pv)
+            first = int(tok)
+            r.first_token_time = time.perf_counter()
+            r.out_tokens.append(first)
+            self._pos[slot] = prep.plen
+            self._last[slot] = first
+            self._tokens_out += 1
+            self._events.append({
+                "step": self._steps, "event": "admit", "uid": r.uid,
+                "slot": slot, "bucket": prep.bucket,
+                "queue_depth": len(self._ready)})
+            emitted.append((r.uid, first))
+            if first == r.sampling.eos_id or len(r.out_tokens) >= prep.eff_new:
+                self._evict(slot)
+        return emitted
+
+    def _evict(self, slot: int) -> None:
+        r = self._slot_req[slot]
+        r.done = True
+        r.finish_time = time.perf_counter()
+        self._pool.release(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self._slot_req[slot] = None
+        self._page_table[slot] = self._garbage[slot]
+        self._pos[slot] = 0
+        self._last[slot] = 0
+        self._slot_eff[slot] = 0
+        self._free_slots.append(slot)
+        self._free_slots.sort()
+        self._finished.append(r)
+        self._events.append({
+            "step": self._steps, "event": "finish", "uid": r.uid, "slot": slot,
+            "queue_depth": len(self._ready), "free_pages": self._pool.free_pages})
+
+    # ----------------------------------------------------------- the loop
+    def _serve(self, params, max_steps: int) -> Iterator[Tuple[int, int]]:
+        """The core loop, as a generator of (uid, token).  ``max_steps``
+        bounds *decode steps* (legacy semantics)."""
+        if params is None:
+            raise ValueError("no params: pass params= to run()/generate() "
+                             "or construct the engine with params=")
+        self._warm_start(params)
+        steps = 0
+        while steps < max_steps:
+            for out in self._admit(params):
+                yield out
+            live = [s for s in range(self.slots) if self._slot_req[s] is not None]
+            if not live:
+                with self._cond:
+                    pending = bool(self._ready) or self._n_prepared < self._n_submitted
+                if not pending:
+                    break
+                # nothing live but work queued: admission must succeed next
+                # pass (submit() guarantees every request fits an empty pool)
+                continue
+            steps += 1
+            self._steps += 1
+            self._live_steps += len(live)
+            t0 = time.perf_counter()
+            nxt, self._pk, self._pv = self._decode_fn(
+                params, self._pk, self._pv,
+                jnp.asarray(self._page_table), jnp.asarray(self._pos),
+                jnp.asarray(self._last))
+            nxt = np.asarray(nxt)
+            if not self._decode_warm:
+                self._decode_warm = True
+                self._compile_log.append({
+                    "kind": "decode", "slots": self.slots,
+                    "kv_window": self._kv_window,
+                    "first_call_s": time.perf_counter() - t0})
+            for s in live:
+                r = self._slot_req[s]
+                tok = int(nxt[s])
+                self._pos[s] += 1
+                self._last[s] = tok
+                r.out_tokens.append(tok)
+                self._tokens_out += 1
+                yield (r.uid, tok)
+                if tok == r.sampling.eos_id or len(r.out_tokens) >= self._slot_eff[s]:
+                    self._evict(s)
+
+    def run(self, params=None, max_steps: int = 256) -> List[Request]:
+        """Serve until the queue drains (or ``max_steps`` decode steps);
+        returns the requests that finished during this call."""
+        params = params if params is not None else self._params
+        start = len(self._finished)
+        for _ in self._serve(params, max_steps):
+            pass
+        return self._finished[start:]
+
+    def generate(self, prompts: Iterable[Any], *, params=None,
+                 sampling: Optional[SamplingParams] = None,
+                 max_steps: int = 100_000) -> Iterator[Tuple[int, int]]:
+        """Streaming API: submit ``prompts`` (token-id sequences) and
+        return an iterator of (uid, token) pairs in emission order.
+        Uids are assigned in prompt order starting from the engine's
+        running counter; tokens include each request's prefill token."""
+        params = params if params is not None else self._params
+        for pr in prompts:
+            sp = (dataclasses.replace(sampling) if sampling is not None
+                  else SamplingParams())
+            uid = self._next_uid
+            self.submit(Request(uid=uid, prompt=np.asarray(pr, np.int32),
+                                sampling=sp))
+        return self._serve(params, max_steps)
+
+    # ------------------------------------------------------- introspection
     def cache_stats(self) -> stripe_cache.CacheStats:
-        """Hit/miss stats over (batch, length) compile buckets."""
+        """True hit/miss traffic over compile-bucket and stripe-program
+        lookups (every admission does a real keyed cache lookup)."""
         return self._compile_cache.stats
 
     def compile_log(self) -> List[Dict[str, Any]]:
-        """One record per cold bucket: shapes + first-call (compile) time."""
+        """One record per cold compile: prefill buckets, decode program
+        build, first decode call."""
         return list(self._compile_log)
 
-    def _bucket(self, plen: int) -> str:
-        return stripe_cache.content_key(
-            "serve_bucket", getattr(self.cfg, "name", ""), self.slots, plen)
+    def compile_records(self) -> Dict[str, CompileRecord]:
+        """Stripe ``CompileRecord`` per compiled block program (fusion
+        groups, kernel counts, per-block backends and fallbacks), keyed
+        ``decode/<block>`` and ``prefill_L<bucket>/<block>``."""
+        return dict(self._records)
 
-    def _next_wave(self) -> List[Request]:
-        wave = self._queue[: self.slots]
-        self._queue = self._queue[self.slots :]
-        return wave
+    def events(self) -> List[Dict[str, Any]]:
+        """Admission/eviction event log (used by tests and benches for
+        slot-reuse and utilization accounting)."""
+        return list(self._events)
 
-    def run(self, params, max_steps: int = 256) -> List[Request]:
-        finished: List[Request] = []
-        steps = 0
-        while self._queue and steps < max_steps:
-            wave = self._next_wave()
-            # pad the wave to full slots by repeating the last request's
-            # prompt (masked out of results)
-            prompts = [r.prompt for r in wave]
-            while len(prompts) < self.slots:
-                prompts.append(prompts[-1])
-            plen = max(len(p) for p in prompts)
-            toks = np.zeros((self.slots, plen), np.int32)
-            for i, p in enumerate(prompts):
-                toks[i, plen - len(p):] = p  # left-align end-of-prompt
-
-            cache = self.model.init_cache(self.slots, self.max_len)
-            batch = {"tokens": jnp.asarray(toks)}
-            if self.cfg.frontend == "patches":
-                batch["patches"] = jnp.zeros((self.slots, self.cfg.frontend_len, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
-            if self.cfg.frontend == "frames":
-                batch["frames"] = jnp.zeros((self.slots, plen, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
-            bucket = self._bucket(plen)
-            cold = self._compile_cache.get_memory(bucket) is None
-            t0 = time.perf_counter()
-            logits, cache = self._prefill(params, batch, cache)
-            jax.block_until_ready(logits)
-            if cold:
-                rec = {"slots": self.slots, "plen": plen,
-                       "first_call_s": time.perf_counter() - t0}
-                self._compile_cache.put_memory(bucket, rec)
-                self._compile_log.append(rec)
-            last = np.asarray(jnp.argmax(logits[:, -1, : self.cfg.vocab], axis=-1))
-            live = np.array([i < len(wave) for i in range(self.slots)])
-            for i, r in enumerate(wave):
-                r.out_tokens.append(int(last[i]))
-
-            while any(live[: len(wave)]) and steps < max_steps:
-                steps += 1
-                logits, cache = self._decode(params, cache, jnp.asarray(last[:, None], jnp.int32))
-                last = np.asarray(jnp.argmax(logits[:, -1, : self.cfg.vocab], axis=-1))
-                for i, r in enumerate(wave):
-                    if not live[i]:
-                        continue
-                    tok = int(last[i])
-                    r.out_tokens.append(tok)
-                    if tok == r.eos_id or len(r.out_tokens) >= r.max_new_tokens:
-                        r.done = True
-                        live[i] = False
-                        finished.append(r)
-        return finished
+    def metrics(self) -> Dict[str, Any]:
+        steps = max(self._steps, 1)
+        return {
+            "decode_steps": self._steps,
+            "tokens_out": self._tokens_out,
+            "finished": len(self._finished),
+            "slot_utilization": self._live_steps / (steps * self.slots),
+            "free_pages": self._pool.free_pages,
+            "queue_depth": len(self._ready),
+        }
