@@ -641,6 +641,40 @@ def bench_serving() -> None:
              f"util={util:.2f}\"")
 
 
+def bench_chaos() -> None:
+    """Chaos smoke: the ``serve_traffic.py --faults`` leg at reduced
+    scale.  Replays one Poisson trace through a clean and a faulted
+    continuous engine (fault classes: prefill-compile crash, torn
+    disk-cache writes, device-step errors, prep-thread death, page-alloc
+    failure) and publishes the injected-fault and recovery-event counts;
+    the leg itself asserts exactly-once token-identical completion,
+    fault->event matching, and >= 70% of fault-free throughput."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import serve_traffic as st
+
+    args = argparse.Namespace(requests=250, slots=4, max_len=96,
+                              page_size=16, rate=300.0)
+    cfg = api.configs.get("llama3-8b").scaled(
+        d_model=64, n_layers=2, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab=97, dtype="float32")
+    model = api.build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    results = st.bench_faults(args, cfg, model, params)
+    injected = results["faulted"]["faults_injected"]
+    recovered = results["faulted"]["recovery_events"]
+    emit("chaos_fault_classes", 0.0, len(injected))
+    emit("chaos_faults_injected", 0.0, sum(injected.values()))
+    emit("chaos_recovery_events", 0.0, sum(recovered.values()))
+    emit("chaos_requests_exactly_once", 0.0, args.requests)
+    emit("chaos_retries", 0.0, results["faulted"]["retries"])
+    emit("chaos_quarantine_clears", 0.0,
+         results["faulted"]["quarantine_stats"]["clears"])
+    emit("chaos_throughput_ratio", 0.0, results["faulted_throughput_ratio"])
+
+
 BENCHES = {
     "fig1": bench_fig1_engineering_effort,
     "fig4": bench_fig4_autotile,
@@ -651,6 +685,7 @@ BENCHES = {
     "conv": bench_conv,
     "explore": bench_explore,
     "serving": bench_serving,
+    "chaos": bench_chaos,
     "matmul": bench_stripe_matmul,
     "flash": bench_flash_attention_blocks,
     "hillclimb": bench_hillclimb,

@@ -11,11 +11,22 @@ Both engines are warmed on a throwaway request set before the timed run,
 so the comparison is steady-state serving; cold-boot cost is the
 compile-cache warm-start story (``ServingEngine.compile_log()``).
 
+``--faults`` runs the chaos leg instead: the same Poisson trace is
+replayed through two identical continuous engines — one clean, one under
+an injected fault plan spanning five fault classes (prefill-compile
+crash, torn disk-cache writes, device-step errors, prep-thread death,
+page-allocation failure) — asserting that every request still completes
+with *exactly-once, token-identical* output, that every injected fault is
+matched by a recovery/degradation event in ``engine.events()``, and that
+faulted throughput stays within 70% of fault-free.
+
     PYTHONPATH=src python benchmarks/serve_traffic.py --requests 1000
     PYTHONPATH=src python benchmarks/serve_traffic.py --json OUT.json
+    PYTHONPATH=src python benchmarks/serve_traffic.py --faults --json OUT.json
 """
 import argparse
 import json
+import tempfile
 import threading
 import time
 from typing import Any, Dict, List
@@ -24,6 +35,8 @@ import jax
 import numpy as np
 
 from repro import api
+from repro.core.cache import CompilationCache
+from repro.reliability import faults
 
 
 def make_requests(cfg, n: int, seed: int, rate: float, base_uid: int = 0):
@@ -79,6 +92,113 @@ def drive(eng, params, arrivals, reqs) -> Dict[str, Any]:
     }
 
 
+def _fault_plan(args) -> faults.FaultPlan:
+    """Five fault classes against the timed trace.  Decode-step hits are
+    spread through the run; the compile/cache classes land on the buckets
+    that (deliberately) were not warmed."""
+    return faults.FaultPlan([
+        faults.fail_nth("serve.prefill_compile", 1),          # compile crash
+        faults.fail_nth("cache.disk_write_torn", 2),          # cache corruption
+        faults.fail_nth("cache.disk_write_torn", 5),
+        faults.fail_nth("serve.decode_step", 80),             # device errors
+        faults.fail_nth("serve.decode_step", 400),
+        faults.fail_nth("serve.decode_step", 900),
+        faults.fail_nth("serve.prep_thread", args.requests // 2),  # thread death
+        faults.fail_nth("paged.alloc", 40),                   # alloc failure
+    ])
+
+
+def bench_faults(args, cfg, model, params) -> Dict[str, Any]:
+    """The chaos leg: identical trace through a clean and a faulted
+    engine; asserts completion, exactly-once token parity, fault->event
+    matching, and >= 70% of fault-free throughput."""
+    def mk_engine():
+        return api.ServingEngine(
+            model, api.EngineConfig(slots=args.slots, max_len=args.max_len,
+                                    page_size=args.page_size,
+                                    quarantine_backoff_s=0.25),
+            compile_cache=CompilationCache(disk_dir=tempfile.mkdtemp(
+                prefix="stripe-chaos-")))
+
+    def warm(eng):
+        # warm only the short buckets: the long ones compile during the
+        # timed run (identically in both legs), giving the compile/cache
+        # fault classes real work to corrupt
+        r = np.random.RandomState(1)
+        for i, plen in enumerate([4, 8, 16] * 2):
+            eng.submit(api.Request(
+                uid=1_000_000 + i,
+                prompt=r.randint(1, cfg.vocab, size=plen).astype(np.int32),
+                sampling=api.SamplingParams(max_new_tokens=4)))
+        eng.run(params, max_steps=1_000_000)
+
+    results: Dict[str, Any] = {}
+    tokens: Dict[str, Dict[int, List[int]]] = {}
+    statuses: Dict[str, Dict[int, str]] = {}
+    plan = _fault_plan(args)
+    for label in ("nofault", "faulted"):
+        eng = mk_engine()
+        warm(eng)
+        arrivals, reqs = make_requests(cfg, args.requests, seed=7, rate=args.rate)
+        if label == "faulted":
+            with faults.inject(plan):
+                res = drive(eng, params, arrivals, reqs)
+        else:
+            res = drive(eng, params, arrivals, reqs)
+        tokens[label] = {r.uid: list(r.out_tokens) for r in reqs}
+        statuses[label] = {r.uid: r.status for r in reqs}
+        if label == "faulted":
+            ev_counts: Dict[str, int] = {}
+            for e in eng.events():
+                ev_counts[e["event"]] = ev_counts.get(e["event"], 0) + 1
+            qs = eng.cache_stats()
+            res["faults_injected"] = plan.fired_counts()
+            res["recovery_events"] = {
+                k: v for k, v in ev_counts.items()
+                if k in ("quarantine", "quarantine_expired", "quarantine_clear",
+                         "device_step_failed", "requeue", "prep_thread_restart",
+                         "alloc_failed", "cache_corruption_recovered",
+                         "retry_exhausted", "prep_failed")}
+            res["quarantine_stats"] = {
+                "quarantined": qs.quarantined, "hits": qs.quarantine_hits,
+                "expiries": qs.quarantine_expiries, "clears": qs.quarantine_clears}
+            res["retries"] = eng.metrics()["retries"]
+
+            # ---- every injected fault matches a recovery/degradation event
+            fired = plan.fired_counts()
+            ev = res["recovery_events"]
+            assert fired.get("serve.prefill_compile", 0) == ev.get("quarantine", 0)
+            assert fired.get("serve.decode_step", 0) == ev.get("device_step_failed", 0)
+            assert fired.get("serve.prep_thread", 0) == ev.get("prep_thread_restart", 0)
+            assert fired.get("paged.alloc", 0) == ev.get("alloc_failed", 0)
+            torn = fired.get("cache.disk_write_torn", 0)
+            recovered = sum(e.get("count", 0) for e in eng.events()
+                            if e["event"] == "cache_corruption_recovered")
+            assert torn == recovered, f"{torn} torn writes, {recovered} recovered"
+            assert len(fired) >= 4, f"need >=4 distinct fault classes, got {fired}"
+            # quarantine entry + backoff expiry visible via cache_stats()
+            assert qs.quarantined >= 1 and qs.quarantine_expiries >= 1
+        results[label] = res
+        print(f"{label:11s}: {res['tok_per_s']:8.0f} tok/s  "
+              f"p50 {res['p50_s']*1e3:7.1f} ms  p99 {res['p99_s']*1e3:7.1f} ms  "
+              f"util {res['slot_utilization']}")
+
+    # ---- exactly-once, token-identical completion under faults
+    assert statuses["faulted"] == statuses["nofault"], \
+        "fault recovery must not change any request's outcome"
+    assert all(s == "ok" for s in statuses["faulted"].values())
+    diverged = [u for u in tokens["nofault"]
+                if tokens["faulted"][u] != tokens["nofault"][u]]
+    assert not diverged, f"{len(diverged)} requests diverged under faults: {diverged[:5]}"
+    ratio = results["faulted"]["tok_per_s"] / results["nofault"]["tok_per_s"]
+    results["faulted_throughput_ratio"] = round(ratio, 3)
+    print(f"faulted vs fault-free: {ratio:.2f}x throughput "
+          f"({len(results['faulted']['faults_injected'])} fault classes, "
+          f"all {args.requests} requests exactly-once)")
+    assert ratio >= 0.70, f"faulted throughput {ratio:.2f}x < 0.70x fault-free"
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--requests", type=int, default=1000)
@@ -88,6 +208,9 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=250.0,
                     help="Poisson arrival rate, req/s (0 = all queued at t=0)")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--faults", action="store_true",
+                    help="run the chaos leg (fault injection) instead of "
+                         "the continuous-vs-wave comparison")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the continuous-beats-wave assertions")
     args = ap.parse_args(argv)
@@ -99,6 +222,14 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
 
     results: Dict[str, Any] = {"config": vars(args)}
+    if args.faults:
+        results.update(bench_faults(args, cfg, model, params))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(results, f, indent=2)
+            print(f"# wrote {args.json}")
+        return
+
     engines = (
         ("continuous", api.ServingEngine(model, api.EngineConfig(
             slots=args.slots, max_len=args.max_len, page_size=args.page_size))),

@@ -32,6 +32,9 @@ Exploration:
 Kernels & training (convenience):
     ``matmul``, ``matmul_ref``, ``choose_block_sizes``, ``adamw``,
     ``TrainConfig``, ``Trainer``, ``DataConfig``
+Reliability:
+    ``faults`` (fault-injection module: ``faults.inject``,
+    ``faults.fail_nth``, …), ``FaultPlan``, ``InjectedFault``
 """
 from __future__ import annotations
 
@@ -63,6 +66,7 @@ from .kernels.flash_attention.ops import choose_block_sizes
 from .kernels.stripe_matmul.ops import matmul, matmul_ref
 from .models.build import build_model, make_batch
 from .optim import adamw
+from .reliability import FaultPlan, InjectedFault, faults
 from .serving import EngineConfig, Request, SamplingParams, ServingEngine, WaveEngine
 from .train.loop import TrainConfig, Trainer
 
@@ -89,4 +93,6 @@ __all__ = [
     # kernels & training
     "matmul", "matmul_ref", "choose_block_sizes", "adamw",
     "TrainConfig", "Trainer", "DataConfig",
+    # reliability
+    "faults", "FaultPlan", "InjectedFault",
 ]

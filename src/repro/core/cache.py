@@ -23,9 +23,12 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 from collections import OrderedDict
 from pathlib import Path
 from typing import Any, Callable, Dict, Optional
+
+from ..reliability import faults
 
 # v2: tiling-oracle entries are keyed by block name + group fingerprint
 # (fusion-group tilings replay as a unit); v1 name-keyed payloads are
@@ -80,9 +83,94 @@ class CacheStats:
     disk_misses: int = 0
     disk_errors: int = 0
     disk_puts: int = 0
+    # negative-cache (quarantine) traffic: failures recorded, lookups
+    # served degraded because an embargo was active, embargo expiries
+    # (retry allowed again), and successful recoveries
+    quarantined: int = 0
+    quarantine_hits: int = 0
+    quarantine_expiries: int = 0
+    quarantine_clears: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
+
+
+# --------------------------------------------------------------------------
+# Compile-failure quarantine (negative cache with exponential backoff)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class QuarantineEntry:
+    """One quarantined compile key: why it failed, how often, and until
+    when re-attempts are embargoed (``time.monotonic`` deadline)."""
+
+    key: str
+    reason: str
+    fail_count: int
+    backoff_s: float
+    until: float
+    expired: bool = False  # the embargo lapsed; a retry is permitted
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"key": self.key, "reason": self.reason,
+                "fail_count": self.fail_count,
+                "backoff_s": round(self.backoff_s, 4),
+                "expired": self.expired}
+
+
+class QuarantineStore:
+    """Negative cache over compile keys: a (program, config) point whose
+    compile crashed is embargoed with exponential backoff so the serving
+    hot path does not re-attempt it every step; while embargoed, lookups
+    take the degraded (jnp fallback) path.  Expiry permits exactly one
+    retry: success clears the entry, failure doubles the backoff."""
+
+    def __init__(self, base_backoff_s: float = 0.5, max_backoff_s: float = 30.0,
+                 stats: Optional[CacheStats] = None):
+        self.base_backoff_s = float(base_backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
+        self.stats = stats if stats is not None else CacheStats()
+        self._entries: Dict[str, QuarantineEntry] = {}
+
+    def record_failure(self, key: str, reason: str) -> QuarantineEntry:
+        prev = self._entries.get(key)
+        backoff = (min(prev.backoff_s * 2.0, self.max_backoff_s)
+                   if prev is not None else self.base_backoff_s)
+        entry = QuarantineEntry(
+            key=key, reason=str(reason)[:500],
+            fail_count=(prev.fail_count + 1 if prev is not None else 1),
+            backoff_s=backoff, until=time.monotonic() + backoff)
+        self._entries[key] = entry
+        self.stats.quarantined += 1
+        return entry
+
+    def active(self, key: str) -> bool:
+        """True while the embargo holds.  The first observation after the
+        deadline counts as an expiry (a retry is now permitted) and
+        returns False — the entry stays, so a failed retry doubles the
+        backoff instead of starting over."""
+        entry = self._entries.get(key)
+        if entry is None:
+            return False
+        if time.monotonic() < entry.until:
+            self.stats.quarantine_hits += 1
+            return True
+        if not entry.expired:
+            entry.expired = True
+            self.stats.quarantine_expiries += 1
+        return False
+
+    def get(self, key: str) -> Optional[QuarantineEntry]:
+        return self._entries.get(key)
+
+    def clear(self, key: str) -> bool:
+        if key in self._entries:
+            del self._entries[key]
+            self.stats.quarantine_clears += 1
+            return True
+        return False
+
+    def entries(self) -> Dict[str, QuarantineEntry]:
+        return dict(self._entries)
 
 
 # --------------------------------------------------------------------------
@@ -109,6 +197,10 @@ class CompilationCache:
         self.disk_dir: Optional[Path] = None
         if use_disk:
             self.disk_dir = Path(disk_dir) if disk_dir is not None else default_cache_dir()
+        # negative cache for crashed compiles (driver + serving engine);
+        # shares this cache's stats so quarantine traffic shows up in
+        # cache_stats() next to hit/miss counts
+        self.quarantine = QuarantineStore(stats=self.stats)
 
     # ------------------------------------------------------------- memory
     def get_memory(self, key: str) -> Any:
@@ -138,7 +230,12 @@ class CompilationCache:
         if path is None:
             return None
         try:
+            faults.check("cache.disk_read", key=key)
             raw = path.read_text()
+        except faults.InjectedFault:
+            # injected I/O failure: degrade to a miss, never propagate
+            self.stats.disk_errors += 1
+            return None
         except OSError:
             self.stats.disk_misses += 1
             return None
@@ -170,9 +267,23 @@ class CompilationCache:
         except (TypeError, ValueError):
             self.stats.disk_errors += 1
             return
+        if faults.fires("cache.disk_write_torn", key=key):
+            # simulate the torn write a non-atomic writer (or a crash mid
+            # flush) would leave: a truncated entry at the final path.  The
+            # read side must recover it as a miss (corrupt-entry deletion).
+            try:
+                path.parent.mkdir(parents=True, exist_ok=True)
+                path.write_text(data[: max(1, len(data) // 2)])
+            except OSError:
+                pass
+            self.stats.disk_errors += 1
+            return
         try:
+            faults.check("cache.disk_write", key=key)
             path.parent.mkdir(parents=True, exist_ok=True)
-            # atomic publish: no reader ever sees a half-written entry
+            # atomic publish: write the full entry to a temp file in the
+            # same directory, then os.replace() — no reader ever sees a
+            # half-written entry, regardless of where the writer dies
             fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
             try:
                 with os.fdopen(fd, "w") as f:
@@ -181,6 +292,11 @@ class CompilationCache:
             finally:
                 if os.path.exists(tmp):
                     os.unlink(tmp)
+        except faults.InjectedFault:
+            # injected write failure: the entry is simply lost (next read
+            # is a miss); the caller never sees the error
+            self.stats.disk_errors += 1
+            return
         except OSError:
             self.stats.disk_errors += 1
             return

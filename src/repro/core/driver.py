@@ -24,6 +24,7 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
 
+from ..reliability import faults
 from . import cache as _cache
 from .frontend import TileProgram, single_op_program
 from .hwconfig import HardwareConfig
@@ -66,6 +67,12 @@ class CompileRecord:
     # back.  Empty for whole-program backends.
     block_backends: Dict[str, str] = dataclasses.field(default_factory=dict)
     block_fallbacks: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # Compile-failure quarantine: True when this compile served the jnp
+    # fallback because the Pallas lowering *crashed* (not a legality
+    # fallback) now or within the backoff embargo; ``quarantine`` carries
+    # the negative-cache entry (reason, fail_count, backoff_s, expired).
+    quarantined: bool = False
+    quarantine: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def fusion_decisions(self) -> List[Dict]:
         """Accepted/rejected merges recorded by the fusion pass."""
@@ -159,51 +166,90 @@ def _program_groups(opt: Program) -> List[List[str]]:
         [s.name] for s in semantic.entry.stmts if isinstance(s, Block)]
 
 
+@dataclasses.dataclass
+class _Lowered:
+    """What one backend lowering produced, for the CompileRecord."""
+
+    fn: Callable
+    backend: str
+    fallback: str = ""
+    n_kernels: int = 0
+    groups: List[List[str]] = dataclasses.field(default_factory=list)
+    block_backends: Dict[str, str] = dataclasses.field(default_factory=dict)
+    block_fallbacks: Dict[str, str] = dataclasses.field(default_factory=dict)
+    quarantined: bool = False
+    quarantine: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
 def _lower(opt: Program, backend: str, interpret: bool, jit: bool,
-           hw: Optional[HardwareConfig] = None
-           ) -> Tuple[Callable, str, str, int, List[List[str]], Dict[str, str], Dict[str, str]]:
-    """Returns (fn(arrays)->outputs dict, backend used, fallback reason,
-    kernels launched per call, fusion groups, per-unit backends, per-unit
-    fallback reasons)."""
+           hw: Optional[HardwareConfig] = None,
+           quarantine: Optional[_cache.QuarantineStore] = None,
+           key: str = "") -> _Lowered:
+    """Lower the optimized program.  For the pallas backend, a *crash*
+    during lowering (as opposed to a known-unsupported legality fallback)
+    degrades to the jnp path and negative-caches the key in
+    ``quarantine`` with exponential backoff, so a bad (config, program)
+    point serves degraded instead of failing the caller — and is not
+    re-attempted until the embargo lapses."""
     semantic = opt.source or opt
     groups = _program_groups(opt)
     if backend == "reference":
         # the interpreter launches no kernels and ignores grouping
         fn = lambda arrays: execute_reference(semantic, arrays)  # noqa: E731
-        return fn, backend, "", 0, groups, {}, {}
+        return _Lowered(fn, backend, groups=groups)
     fallback = ""
     blk_backends: Dict[str, str] = {}
     blk_falls: Dict[str, str] = {}
+    quarantined = False
+    quar_info: Dict[str, Any] = {}
     if backend == "pallas":
         from .lower_pallas import UnsupportedPallas, lower_program_hybrid
 
-        try:
-            # per-block hybrid: each fusion group / boundary-piece unit
-            # lowers to Pallas or falls back to jnp independently
-            fn = lower_program_hybrid(
-                opt, interpret=interpret,
-                pipeline_depth=hw.pipeline_depth if hw is not None else 2)
-        except UnsupportedPallas as e:
-            backend, fallback = "jnp", str(e)
-        else:
-            if fn.n_pallas > 0:
-                return (fn, "pallas", "", fn.n_kernels, groups,
-                        dict(fn.block_backends), dict(fn.block_reasons))
-            # every unit fell back: take the whole-program jnp path below
-            # (one outer jax.jit beats N independently-jitted dispatches),
-            # keeping the per-unit reasons on the record
+        if quarantine is not None and quarantine.active(key):
+            entry = quarantine.get(key)
             backend = "jnp"
-            fallback = "; ".join(f"{k}: {v}"
-                                 for k, v in fn.block_reasons.items())
-            blk_backends = dict(fn.block_backends)
-            blk_falls = dict(fn.block_reasons)
+            fallback = f"quarantined: {entry.reason}"
+            quarantined, quar_info = True, entry.as_dict()
+        else:
+            try:
+                faults.check("compile.stripe_jit", key=key, backend="pallas")
+                # per-block hybrid: each fusion group / boundary-piece unit
+                # lowers to Pallas or falls back to jnp independently
+                fn = lower_program_hybrid(
+                    opt, interpret=interpret,
+                    pipeline_depth=hw.pipeline_depth if hw is not None else 2)
+            except UnsupportedPallas as e:
+                # legality fallback: deterministic and known, no quarantine
+                backend, fallback = "jnp", str(e)
+            except Exception as e:  # crash-class failure: quarantine the key
+                backend = "jnp"
+                fallback = f"compile crashed: {e!r}"
+                quarantined = True
+                if quarantine is not None:
+                    quar_info = quarantine.record_failure(key, repr(e)).as_dict()
+            else:
+                if quarantine is not None and quarantine.get(key) is not None:
+                    # the embargo had lapsed and the retry succeeded
+                    quarantine.clear(key)
+                if fn.n_pallas > 0:
+                    return _Lowered(fn, "pallas", "", fn.n_kernels, groups,
+                                    dict(fn.block_backends), dict(fn.block_reasons))
+                # every unit fell back: take the whole-program jnp path below
+                # (one outer jax.jit beats N independently-jitted dispatches),
+                # keeping the per-unit reasons on the record
+                backend = "jnp"
+                fallback = "; ".join(f"{k}: {v}"
+                                     for k, v in fn.block_reasons.items())
+                blk_backends = dict(fn.block_backends)
+                blk_falls = dict(fn.block_reasons)
     fn = lower_program_jnp(semantic, groups=groups)
     n_kernels = fn.n_kernels
     if jit:
         import jax
 
         fn = jax.jit(fn)
-    return fn, backend, fallback, n_kernels, groups, blk_backends, blk_falls
+    return _Lowered(fn, backend, fallback, n_kernels, groups,
+                    blk_backends, blk_falls, quarantined, quar_info)
 
 
 # --------------------------------------------------------------------------
@@ -286,34 +332,46 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
     )
     hit = cache.get_memory(key)
     if isinstance(hit, CompiledProgram):
-        # fresh record per call: never mutate the cached one (the cold
-        # caller holds it), and report this call's lookup time
-        rec = dataclasses.replace(hit.record, cache_hit=True, disk_hit=False,
-                                  compile_time_s=time.perf_counter() - t0)
-        return CompiledProgram(hit.program, hit._fn, hit.hw, rec)
+        if hit.record.quarantined and not cache.quarantine.active(key):
+            # the cached artifact is a quarantine fallback and the backoff
+            # embargo has lapsed: drop through and re-attempt the real
+            # backend (success clears the entry, failure doubles backoff)
+            hit = None
+        else:
+            # fresh record per call: never mutate the cached one (the cold
+            # caller holds it), and report this call's lookup time
+            rec = dataclasses.replace(hit.record, cache_hit=True, disk_hit=False,
+                                      compile_time_s=time.perf_counter() - t0)
+            if rec.quarantined:
+                entry = cache.quarantine.get(key)
+                rec.quarantine = entry.as_dict() if entry is not None else dict(rec.quarantine)
+            return CompiledProgram(hit.program, hit._fn, hit.hw, rec)
 
     payload = cache.get_disk(key) if use_disk else None
     oracle = TilingOracle(known=(payload or {}).get("tilings"))
     pm = PassManager(hw, oracle=oracle, autotune_workers=workers)
     opt = pm.run(copy.deepcopy(prog))
-    fn, used_backend, fallback, n_kernels, groups, blk_backends, blk_falls = \
-        _lower(opt, backend, interpret, jit, hw)
+    low = _lower(opt, backend, interpret, jit, hw,
+                 quarantine=cache.quarantine, key=key)
     record = CompileRecord(
-        key=key, backend=used_backend, hw_name=hw.name,
+        key=key, backend=low.backend, hw_name=hw.name,
         cache_hit=False, disk_hit=payload is not None,
         compile_time_s=time.perf_counter() - t0,
         tilings=dict(oracle.chosen), pass_trace=list(pm.trace),
-        fallback_reason=fallback, n_kernels=n_kernels, groups=groups,
-        block_backends=blk_backends, block_fallbacks=blk_falls,
+        fallback_reason=low.fallback, n_kernels=low.n_kernels,
+        groups=low.groups,
+        block_backends=low.block_backends, block_fallbacks=low.block_fallbacks,
+        quarantined=low.quarantined, quarantine=low.quarantine,
     )
-    compiled = CompiledProgram(opt, fn, hw, record)
+    compiled = CompiledProgram(opt, low.fn, hw, record)
     cache.put_memory(key, compiled)
     if use_disk:
         cache.put_disk(key, {
             "tilings": oracle.chosen, "pass_trace": pm.trace,
-            "hw": hw.name, "backend": used_backend,
+            "hw": hw.name, "backend": low.backend,
             "compile_time_s": record.compile_time_s,
-            "n_kernels": n_kernels, "groups": groups,
-            "block_backends": blk_backends, "block_fallbacks": blk_falls,
+            "n_kernels": low.n_kernels, "groups": low.groups,
+            "block_backends": low.block_backends,
+            "block_fallbacks": low.block_fallbacks,
         })
     return compiled

@@ -29,6 +29,32 @@ Architecture (one PR-sized tour; DESIGN.md §9 has the long form):
   background thread that pads and buckets it while the device is busy
   decoding; admission drains the prepared queue (deterministically —
   single FIFO worker) at each step boundary.
+* **Resilience** (:mod:`repro.reliability.faults` names the injection
+  sites; DESIGN.md §10 has the long form).  The engine survives every
+  registered serve-time fault site:
+
+  - *prep-thread supervision* — a request whose prep raises becomes a
+    failed request (``status == "failed"``); a dying worker hands its
+    exception back under the condition variable (no 10s stall) and is
+    restarted, its in-flight request requeued (prep is side-effect-free;
+    bounded by ``max_retries``);
+  - *compile quarantine* — a prompt bucket whose compiled-step build
+    raises serves through the plain-jnp prefill instead (same tokens),
+    and the bucket is negative-cached with exponential backoff
+    (``quarantine``/``quarantine_expired``/``quarantine_clear`` events);
+  - *deadlines* — ``SamplingParams.ttl_s`` / ``EngineConfig.default_ttl_s``
+    bound each request's life; expired requests are evicted (queued ones
+    never occupy a slot) with ``status == "deadline_exceeded"``;
+  - *load shedding* — with ``EngineConfig.max_queue`` set, ``submit()``
+    rejects excess requests (``status == "shed"``, a ``shed`` event)
+    instead of growing the queue without bound;
+  - *crash-safe decode* — a device-step failure evicts only the affected
+    slots and requeues their requests (bounded by ``max_retries``); the
+    retried incarnation regenerates the already-emitted prefix and
+    *verifies* it token-for-token without re-emitting (exactly-once
+    output), while healthy slots keep decoding;
+  - *page-allocation failures* — a failed allocation defers the
+    admission (``alloc_failed`` event) instead of crashing the engine.
 
 Public contract
 ---------------
@@ -37,6 +63,12 @@ Public contract
 
 * batch: ``engine.submit(Request(...)); finished = engine.run(params)``;
 * streaming: ``for uid, tok in engine.generate(prompts, params=params)``.
+
+``submit()`` returns ``False`` when the bounded queue sheds the request.
+``run()`` returns every request that reached a terminal state during the
+call — check ``Request.status`` (``ok`` / ``deadline_exceeded`` /
+``failed``); shed requests never enter the engine and are listed by
+:meth:`ServingEngine.shed`.
 
 Greedy decoding only (``SamplingParams.temperature == 0.0``); a request's
 ``out_tokens`` includes the token emitted by its prefill step.
@@ -57,6 +89,7 @@ import numpy as np
 from ..core import cache as stripe_cache
 from ..core.driver import CompileRecord
 from ..core.hwconfig import get_config as _get_hw
+from ..reliability import faults
 from .paged import PagePool, init_pages, make_decode_step, make_prefill_step, pages_needed
 from .request import EngineConfig, Request, SamplingParams
 from .stripe_decode import EngineLikeConfig, build_programs
@@ -159,14 +192,30 @@ class ServingEngine:
         self._n_prepared = 0
         self._order = 0
         self._prep_thread: Optional[threading.Thread] = None
+        # a dying prep worker leaves (in-flight request, exception) here and
+        # notifies the condition variable so _drain_prep reacts immediately
+        self._prep_exc: Optional[Tuple[Optional[Request], BaseException]] = None
+        self._prep_restarts = 0
+
+        # ---- resilience: bucket compile quarantine + retry/replay state
+        self._quarantine = stripe_cache.QuarantineStore(
+            base_backoff_s=config.quarantine_backoff_s,
+            stats=self._compile_cache.stats)
+        # per-slot exactly-once bookkeeping: tokens emitted by this
+        # incarnation, and how many of them are replays of pre-failure output
+        self._slot_emitted = np.zeros(self.slots, np.int64)
+        self._slot_replay = np.zeros(self.slots, np.int64)
+        self._disk_errors_seen = self._compile_cache.stats.disk_errors
 
         # ---- bookkeeping
         self._next_uid = 0
         self._events: List[Dict[str, Any]] = []
         self._finished: List[Request] = []
+        self._shed_reqs: List[Request] = []
         self._steps = 0
         self._live_steps = 0
         self._tokens_out = 0
+        self._retries_total = 0
         self._warmed = False
         self._decode_warm = False
 
@@ -210,30 +259,81 @@ class ServingEngine:
         Every admission routes through this lookup, so bucket traffic is
         counted by the compilation cache for real (``cache_stats()``), and
         every new bucket is added to the on-disk manifest for the next
-        boot's warm start."""
+        boot's warm start.
+
+        A bucket whose compile *crashes* is quarantined (negative-cached
+        with exponential backoff) and served through the plain-jnp prefill
+        fallback — same math, same tokens — on the very step the compile
+        failed; when the embargo lapses the next admission re-attempts the
+        real compile."""
         key = self._prefill_key(bucket)
+        entry = self._quarantine.get(key)
+        was_expired = entry.expired if entry is not None else None
+        if self._quarantine.active(key):
+            return self._prefill_fallback(bucket, params)
+        if entry is not None and was_expired is False:
+            # embargo just lapsed: one retry is permitted below
+            self._events.append({
+                "step": self._steps, "event": "quarantine_expired",
+                "bucket": bucket, "fail_count": entry.fail_count})
         fn = self._compile_cache.get_memory(key)
         if fn is not None:
             return fn
         t0 = time.perf_counter()
-        progs = (build_programs(self.cfg, bucket, self._jc)
-                 if self.config.use_stripe_decode else None)
-        fn = jax.jit(make_prefill_step(self.cfg, progs, self._ps, bucket))
+        try:
+            faults.check("serve.prefill_compile", bucket=bucket)
+            progs = (build_programs(self.cfg, bucket, self._jc)
+                     if self.config.use_stripe_decode else None)
+            fn = jax.jit(make_prefill_step(self.cfg, progs, self._ps, bucket))
+            # trace + compile now (dummy call into the slot-0 garbage page,
+            # result discarded) so the admission that triggered this pays the
+            # whole cost here, visibly, and later admissions are warm.
+            row = np.full(self._pps, self._garbage[0], np.int32)
+            out = fn(params, jnp.zeros((1, bucket), jnp.int32), jnp.int32(1),
+                     jnp.asarray(row), self._pk, self._pv)
+            jax.block_until_ready(out)
+        except Exception as e:  # noqa: BLE001 — any compile crash quarantines
+            qe = self._quarantine.record_failure(key, repr(e))
+            self._events.append({
+                "step": self._steps, "event": "quarantine", "bucket": bucket,
+                "reason": repr(e)[:200], "fail_count": qe.fail_count,
+                "backoff_s": round(qe.backoff_s, 4)})
+            return self._prefill_fallback(bucket, params)
         if progs is not None:
             self._records.update(
                 {f"prefill_L{bucket}/{k}": v for k, v in progs.records.items()})
-        # trace + compile now (dummy call into the slot-0 garbage page,
-        # result discarded) so the admission that triggered this pays the
-        # whole cost here, visibly, and later admissions are warm.
-        row = np.full(self._pps, self._garbage[0], np.int32)
-        out = fn(params, jnp.zeros((1, bucket), jnp.int32), jnp.int32(1),
-                 jnp.asarray(row), self._pk, self._pv)
-        jax.block_until_ready(out)
+        if entry is not None:
+            # post-embargo retry succeeded: the bucket is healthy again
+            self._quarantine.clear(key)
+            self._events.append({"step": self._steps, "event": "quarantine_clear",
+                                 "bucket": bucket})
         self._compile_cache.put_memory(key, fn)
         self._compile_log.append({
             "kind": "prefill", "bucket": bucket, "slots": 1, "plen": bucket,
             "first_call_s": time.perf_counter() - t0, "warm_start": warm})
         self._touch_manifest(bucket)
+        return fn
+
+    def _prefill_fallback(self, bucket: int, params):
+        """Degraded prefill for a quarantined bucket: plain jnp, no stripe
+        programs, cached under its own key.  Produces the same tokens as
+        the stripe path (both are bit-exact vs the dense reference), so a
+        quarantined bucket degrades in *throughput*, never in output."""
+        fkey = stripe_cache.content_key(
+            "serve_prefill_fallback", self._model_fp, self._ps, self._pps, bucket)
+        fn = self._compile_cache.get_memory(fkey)
+        if fn is not None:
+            return fn
+        t0 = time.perf_counter()
+        fn = jax.jit(make_prefill_step(self.cfg, None, self._ps, bucket))
+        row = np.full(self._pps, self._garbage[0], np.int32)
+        out = fn(params, jnp.zeros((1, bucket), jnp.int32), jnp.int32(1),
+                 jnp.asarray(row), self._pk, self._pv)
+        jax.block_until_ready(out)
+        self._compile_cache.put_memory(fkey, fn)
+        self._compile_log.append({
+            "kind": "prefill_fallback", "bucket": bucket,
+            "first_call_s": time.perf_counter() - t0})
         return fn
 
     def _touch_manifest(self, bucket: int) -> None:
@@ -264,10 +364,18 @@ class ServingEngine:
                              "buckets": buckets})
 
     # ----------------------------------------------------------- admission
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
         """Enqueue a request.  Validation is synchronous (raises here);
-        padding/bucketing happens on the prep thread."""
+        padding/bucketing happens on the prep thread.
+
+        Returns ``False`` when the bounded queue (``EngineConfig.max_queue``)
+        sheds the request instead of admitting it — the request is marked
+        ``status == "shed"`` and never enters the engine."""
         req.submit_time = time.perf_counter()
+        ttl = (req.sampling.ttl_s if req.sampling.ttl_s is not None
+               else self.config.default_ttl_s)
+        if ttl is not None:
+            req.deadline = req.submit_time + ttl
         plen = int(req.prompt.size)
         if plen > self.max_len:
             raise ValueError(
@@ -277,11 +385,24 @@ class ServingEngine:
             raise ValueError(
                 f"request {req.uid}: needs more pages than the whole pool "
                 f"({self._pool.pool_pages}); raise EngineConfig.pages")
+        if self.config.max_queue is not None:
+            with self._cond:
+                depth = (self._n_submitted - self._n_prepared) + len(self._ready)
+            if depth >= self.config.max_queue:
+                req.status = "shed"
+                req.done = True
+                req.finish_time = req.submit_time
+                self._shed_reqs.append(req)
+                self._events.append({"step": self._steps, "event": "shed",
+                                     "uid": req.uid, "queue_depth": depth})
+                return False
         self._next_uid = max(self._next_uid, req.uid + 1)
         self._ensure_prep_thread()
-        self._n_submitted += 1
+        with self._cond:
+            self._n_submitted += 1
         self._events.append({"step": self._steps, "event": "enqueue", "uid": req.uid})
         self._raw.put(req)
+        return True
 
     def _ensure_prep_thread(self) -> None:
         if self._prep_thread is None or not self._prep_thread.is_alive():
@@ -290,15 +411,47 @@ class ServingEngine:
             self._prep_thread.start()
 
     def _prep_loop(self) -> None:
-        while True:
-            item = self._raw.get()
-            if item is _STOP:
-                return
-            prep = self._prepare(item)
+        item: Any = None
+        try:
+            while True:
+                item = self._raw.get()
+                if item is _STOP:
+                    return
+                try:
+                    faults.check("serve.prep", uid=item.uid)
+                    prep = self._prepare(item)
+                except Exception as e:  # noqa: BLE001 — per-item failure:
+                    # the request fails, the worker survives
+                    with self._cond:
+                        self._n_prepared += 1
+                        self._fail_prep(item, e)
+                        self._cond.notify_all()
+                    continue
+                # thread-level fault site: simulates the worker dying with
+                # a prepared-but-unhanded item in flight
+                faults.check("serve.prep_thread", uid=item.uid)
+                with self._cond:
+                    self._ready.append(prep)
+                    self._n_prepared += 1
+                    self._cond.notify_all()
+        except BaseException as e:
+            # dying: hand the exception (and the in-flight request) back to
+            # the serving thread under the condition variable so _drain_prep
+            # wakes immediately instead of stalling on its timeout; the
+            # handoff is the report, so don't also re-raise into the void
             with self._cond:
-                self._ready.append(prep)
-                self._n_prepared += 1
+                self._prep_exc = (item if isinstance(item, Request) else None, e)
                 self._cond.notify_all()
+
+    def _fail_prep(self, req: Request, exc: BaseException) -> None:
+        """Terminal-fail a request that never made it past prep."""
+        req.status = "failed"
+        req.error = f"prep failed: {exc!r}"[:300]
+        req.done = True
+        req.finish_time = time.perf_counter()
+        self._finished.append(req)
+        self._events.append({"step": self._steps, "event": "prep_failed",
+                             "uid": req.uid, "error": req.error})
 
     def _prepare(self, req: Request) -> _Prepared:
         plen = int(req.prompt.size)
@@ -306,7 +459,8 @@ class ServingEngine:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = req.prompt
         eff = min(req.sampling.max_new_tokens, self.max_len - plen + 1)
-        order, self._order = self._order, self._order + 1
+        with self._cond:
+            order, self._order = self._order, self._order + 1
         return _Prepared(req=req, order=order, plen=plen, bucket=bucket,
                          tokens=toks, n_pages=pages_needed(plen, eff, self._ps),
                          eff_new=eff)
@@ -314,12 +468,48 @@ class ServingEngine:
     def _drain_prep(self) -> None:
         """Barrier: wait until everything submitted so far is prepared.
         Keeps admission deterministic (pure arrival order) while the
-        actual padding work overlapped with the previous device steps."""
+        actual padding work overlapped with the previous device steps.
+
+        Supervision: a dying worker notifies the condition variable with
+        its exception attached (``self._prep_exc``), so thread death is
+        detected immediately — not after a multi-second stall.  The worker
+        is restarted and its in-flight request (if any) requeued — prep is
+        side-effect-free, so the retry is safe — bounded by
+        ``max_retries`` (exhaustion fails the request).  A worker found
+        dead *without* a handoff is a fail-fast error."""
         with self._cond:
             while self._n_prepared < self._n_submitted:
-                if not self._cond.wait(timeout=10.0):
+                if self._prep_exc is not None:
+                    item, exc = self._prep_exc
+                    self._prep_exc = None
+                    self._prep_restarts += 1
+                    ev = {"step": self._steps, "event": "prep_thread_restart",
+                          "restarts": self._prep_restarts,
+                          "error": repr(exc)[:200]}
+                    if item is not None:
+                        item.retries += 1
+                        self._retries_total += 1
+                        if item.retries > self.config.max_retries:
+                            self._n_prepared += 1
+                            self._fail_prep(item, exc)
+                            ev["failed_uid"] = item.uid
+                        else:
+                            # nothing happened to the request yet: retry it
+                            # through the restarted worker
+                            self._raw.put(item)
+                            ev["requeued_uid"] = item.uid
+                    self._events.append(ev)
+                    self._prep_thread = None
+                    self._ensure_prep_thread()
+                    continue
+                if not self._cond.wait(timeout=0.25):
+                    if self._prep_exc is not None:
+                        continue
                     if self._prep_thread is None or not self._prep_thread.is_alive():
-                        raise RuntimeError("serving prep thread died")
+                        raise RuntimeError(
+                            "serving prep thread died without handing back its "
+                            f"work ({self._n_submitted - self._n_prepared} "
+                            "request(s) pending)")
 
     def close(self) -> None:
         """Stop the prep thread (idempotent; the engine stays usable —
@@ -346,11 +536,64 @@ class ServingEngine:
                 best = (k, i)
         return None if best is None else best[1]
 
+    def _expire_queued(self) -> None:
+        """Drop queued requests whose deadline passed — they never occupy
+        a slot; whatever tokens they have (none, pre-admission) stand."""
+        now = time.perf_counter()
+        with self._cond:
+            expired = [p for p in self._ready
+                       if p.req.deadline and now > p.req.deadline]
+            for p in expired:
+                self._ready.remove(p)
+        for p in expired:
+            self._finish_terminal(p.req, "deadline_exceeded", where="queued")
+
+    def _expire_slots(self) -> None:
+        """Evict live requests whose deadline passed mid-decode; their
+        partial output stands, the slot and pages recycle immediately."""
+        now = time.perf_counter()
+        for s in range(self.slots):
+            r = self._slot_req[s]
+            if r is not None and r.deadline and now > r.deadline:
+                self._release_slot(s)
+                self._finish_terminal(r, "deadline_exceeded", where="slot")
+
+    def _finish_terminal(self, r: Request, status: str, *, where: str = "",
+                         error: str = "") -> None:
+        """Move a request to a non-ok terminal state."""
+        r.status = status
+        if error:
+            r.error = error
+        r.done = True
+        r.finish_time = time.perf_counter()
+        self._finished.append(r)
+        ev = {"step": self._steps, "event": status, "uid": r.uid,
+              "tokens": len(r.out_tokens)}
+        if where:
+            ev["where"] = where
+        if error:
+            ev["error"] = error[:200]
+        self._events.append(ev)
+
+    def _surface_cache_errors(self) -> None:
+        """Turn disk-cache corruption the CompilationCache absorbed (torn
+        or unreadable entries treated as misses) into engine events so
+        every injected cache fault has a visible recovery record."""
+        errs = self._compile_cache.stats.disk_errors
+        if errs > self._disk_errors_seen:
+            self._events.append({
+                "step": self._steps, "event": "cache_corruption_recovered",
+                "count": errs - self._disk_errors_seen})
+            self._disk_errors_seen = errs
+
     def _admit(self, params) -> List[Tuple[int, int]]:
         """Fill free slots from the prepared queue; returns the
-        (uid, first_token) pairs emitted by the prefills."""
+        (uid, first_token) pairs emitted by the prefills (a retried
+        request's replayed first token is verified, not re-emitted)."""
         emitted: List[Tuple[int, int]] = []
         self._drain_prep()
+        self._expire_queued()
+        self._surface_cache_errors()
         while self._free_slots:
             with self._cond:
                 idx = self._pick_candidate()
@@ -359,7 +602,17 @@ class ServingEngine:
                 prep = self._ready[idx]
                 del self._ready[idx]
             pages = self._pool.alloc(prep.n_pages)
-            assert pages is not None  # _pick_candidate checked can_alloc
+            if pages is None:
+                # allocation failed after can_alloc said yes (injected fault
+                # or a raced pool): defer, don't crash — the request goes
+                # back to the queue head and retries next admission phase
+                with self._cond:
+                    self._ready.appendleft(prep)
+                self._events.append({
+                    "step": self._steps, "event": "alloc_failed",
+                    "uid": prep.req.uid, "pages": prep.n_pages,
+                    "free_pages": self._pool.free_pages})
+                break
             slot = self._free_slots.pop(0)
             r = prep.req
             r.slot = slot
@@ -374,24 +627,41 @@ class ServingEngine:
                 params, jnp.asarray(prep.tokens), jnp.int32(prep.plen),
                 jnp.asarray(row), self._pk, self._pv)
             first = int(tok)
-            r.first_token_time = time.perf_counter()
-            r.out_tokens.append(first)
             self._pos[slot] = prep.plen
             self._last[slot] = first
-            self._tokens_out += 1
-            self._events.append({
-                "step": self._steps, "event": "admit", "uid": r.uid,
-                "slot": slot, "bucket": prep.bucket,
-                "queue_depth": len(self._ready)})
-            emitted.append((r.uid, first))
-            if first == r.sampling.eos_id or len(r.out_tokens) >= prep.eff_new:
-                self._evict(slot)
+            replay = r.replay_len
+            if replay > 0:
+                # retried incarnation: the prefill token was already emitted
+                # before the failure — verify, don't re-emit (exactly-once)
+                if first != r.out_tokens[0]:
+                    raise RuntimeError(
+                        f"exactly-once violated on retry of request {r.uid}: "
+                        f"replayed prefill token {first} != recorded "
+                        f"{r.out_tokens[0]}")
+                self._slot_emitted[slot] = 1
+                self._slot_replay[slot] = replay
+                self._events.append({
+                    "step": self._steps, "event": "admit", "uid": r.uid,
+                    "slot": slot, "bucket": prep.bucket, "retry": r.retries,
+                    "replay": replay, "queue_depth": len(self._ready)})
+            else:
+                r.first_token_time = time.perf_counter()
+                r.out_tokens.append(first)
+                self._tokens_out += 1
+                self._slot_emitted[slot] = 1
+                self._slot_replay[slot] = 0
+                self._events.append({
+                    "step": self._steps, "event": "admit", "uid": r.uid,
+                    "slot": slot, "bucket": prep.bucket,
+                    "queue_depth": len(self._ready)})
+                emitted.append((r.uid, first))
+                if first == r.sampling.eos_id or len(r.out_tokens) >= prep.eff_new:
+                    self._evict(slot)
         return emitted
 
-    def _evict(self, slot: int) -> None:
-        r = self._slot_req[slot]
-        r.done = True
-        r.finish_time = time.perf_counter()
+    def _release_slot(self, slot: int) -> None:
+        """Return a slot's pages to the pool and reset its decode state;
+        says nothing about the request's fate (callers finish or requeue)."""
         self._pool.release(self._slot_pages[slot])
         self._slot_pages[slot] = []
         self._slot_req[slot] = None
@@ -399,12 +669,56 @@ class ServingEngine:
         self._pos[slot] = 0
         self._last[slot] = 0
         self._slot_eff[slot] = 0
+        self._slot_emitted[slot] = 0
+        self._slot_replay[slot] = 0
         self._free_slots.append(slot)
         self._free_slots.sort()
+
+    def _evict(self, slot: int) -> None:
+        r = self._slot_req[slot]
+        r.done = True
+        r.finish_time = time.perf_counter()
+        self._release_slot(slot)
         self._finished.append(r)
         self._events.append({
             "step": self._steps, "event": "finish", "uid": r.uid, "slot": slot,
             "queue_depth": len(self._ready), "free_pages": self._pool.free_pages})
+
+    def _on_step_failure(self, live: List[int], exc: BaseException) -> None:
+        """Crash-safe decode recovery: release only the affected slots and
+        requeue their requests (front of queue, bounded by ``max_retries``);
+        healthy slots are untouched and simply redo the step.  Nothing was
+        committed for the failed step — KV pages, positions and output all
+        update only after a successful step — so the retried incarnation
+        replays deterministically from its prefill."""
+        payload = getattr(exc, "payload", None) or {}
+        affected = payload.get("slots")
+        affected = [s for s in (live if affected is None else affected)
+                    if 0 <= s < self.slots and self._slot_req[s] is not None]
+        self._events.append({
+            "step": self._steps, "event": "device_step_failed",
+            "slots": list(affected), "error": repr(exc)[:200]})
+        for s in affected:
+            r = self._slot_req[s]
+            self._release_slot(s)
+            r.retries += 1
+            self._retries_total += 1
+            if r.retries > self.config.max_retries:
+                self._finish_terminal(
+                    r, "failed",
+                    error=f"retries exhausted after device-step failure: {exc!r}")
+                self._events.append({
+                    "step": self._steps, "event": "retry_exhausted",
+                    "uid": r.uid, "retries": r.retries})
+                continue
+            r.replay_len = len(r.out_tokens)
+            r.slot = -1
+            prep = self._prepare(r)
+            with self._cond:
+                self._ready.appendleft(prep)
+            self._events.append({
+                "step": self._steps, "event": "requeue", "uid": r.uid,
+                "retries": r.retries, "replay": r.replay_len})
 
     # ----------------------------------------------------------- the loop
     def _serve(self, params, max_steps: int) -> Iterator[Tuple[int, int]]:
@@ -415,27 +729,48 @@ class ServingEngine:
                              "or construct the engine with params=")
         self._warm_start(params)
         steps = 0
+        stall = 0
         while steps < max_steps:
             for out in self._admit(params):
                 yield out
+            self._expire_slots()
             live = [s for s in range(self.slots) if self._slot_req[s] is not None]
             if not live:
                 with self._cond:
                     pending = bool(self._ready) or self._n_prepared < self._n_submitted
                 if not pending:
                     break
-                # nothing live but work queued: admission must succeed next
-                # pass (submit() guarantees every request fits an empty pool)
+                # nothing live but work queued: admission normally succeeds
+                # next pass (submit() guarantees every request fits an empty
+                # pool), but injected allocation faults can starve it — spin
+                # with a tiny sleep and fail fast rather than hang forever
+                stall += 1
+                if stall > 20_000:
+                    raise RuntimeError(
+                        "admission stalled: queued work cannot be admitted "
+                        f"(free_pages={self._pool.free_pages})")
+                if stall > 1:
+                    time.sleep(0.0002)
                 continue
+            stall = 0
+            t0 = time.perf_counter()
+            try:
+                faults.check("serve.decode_step",
+                             step=self._steps, n_live=len(live))
+                nxt, pk, pv = self._decode_fn(
+                    params, self._pk, self._pv,
+                    jnp.asarray(self._page_table), jnp.asarray(self._pos),
+                    jnp.asarray(self._last))
+                nxt = np.asarray(nxt)
+            except Exception as e:  # noqa: BLE001 — device-step crash:
+                # nothing was committed (pages/pos/output update below, only
+                # on success); recover the affected slots and carry on
+                self._on_step_failure(live, e)
+                continue
+            self._pk, self._pv = pk, pv
             steps += 1
             self._steps += 1
             self._live_steps += len(live)
-            t0 = time.perf_counter()
-            nxt, self._pk, self._pv = self._decode_fn(
-                params, self._pk, self._pv,
-                jnp.asarray(self._page_table), jnp.asarray(self._pos),
-                jnp.asarray(self._last))
-            nxt = np.asarray(nxt)
             if not self._decode_warm:
                 self._decode_warm = True
                 self._compile_log.append({
@@ -447,6 +782,18 @@ class ServingEngine:
                 tok = int(nxt[s])
                 self._pos[s] += 1
                 self._last[s] = tok
+                idx = int(self._slot_emitted[s])
+                self._slot_emitted[s] = idx + 1
+                if idx < self._slot_replay[s]:
+                    # replaying pre-failure output on a retried request:
+                    # greedy decode is deterministic, so the regenerated
+                    # token must equal the recorded one — verify, suppress
+                    if tok != r.out_tokens[idx]:
+                        raise RuntimeError(
+                            f"exactly-once violated on retry of request "
+                            f"{r.uid}: replayed token {tok} at index {idx} "
+                            f"!= recorded {r.out_tokens[idx]}")
+                    continue
                 r.out_tokens.append(tok)
                 self._tokens_out += 1
                 yield (r.uid, tok)
@@ -496,16 +843,35 @@ class ServingEngine:
         return dict(self._records)
 
     def events(self) -> List[Dict[str, Any]]:
-        """Admission/eviction event log (used by tests and benches for
-        slot-reuse and utilization accounting)."""
+        """Admission/eviction/fault-recovery event log (used by tests and
+        benches for slot-reuse, utilization and resilience accounting)."""
         return list(self._events)
+
+    def shed(self) -> List[Request]:
+        """Requests rejected by the bounded queue (``status == "shed"``);
+        they never entered the engine and are not in ``run()``'s result."""
+        return list(self._shed_reqs)
+
+    def quarantine_entries(self) -> Dict[str, Dict[str, Any]]:
+        """Active + historical compile-quarantine entries keyed by the
+        prefill cache key (see ``QuarantineStore``)."""
+        return {k: e.as_dict() for k, e in self._quarantine.entries().items()}
 
     def metrics(self) -> Dict[str, Any]:
         steps = max(self._steps, 1)
+        by_status: Dict[str, int] = {}
+        for r in self._finished:
+            by_status[r.status] = by_status.get(r.status, 0) + 1
         return {
             "decode_steps": self._steps,
             "tokens_out": self._tokens_out,
             "finished": len(self._finished),
+            "finished_by_status": by_status,
+            "shed": len(self._shed_reqs),
+            "retries": self._retries_total,
+            "prep_restarts": self._prep_restarts,
+            "quarantined": sum(1 for e in self._quarantine.entries().values()
+                               if not e.expired),
             "slot_utilization": self._live_steps / (steps * self.slots),
             "free_pages": self._pool.free_pages,
             "queue_depth": len(self._ready),

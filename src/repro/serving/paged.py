@@ -37,6 +37,7 @@ import numpy as np
 
 from ..models import lm
 from ..nn.attention import NEG_INF, causal_mask, mha
+from ..reliability import faults
 from ..nn.core import apply_norm, apply_rope, embed_lookup, rms_head_norm
 from .stripe_decode import DecodePrograms, run_attn_out, run_mlp, run_qkv
 
@@ -71,6 +72,10 @@ class PagePool:
         return len(self._free) >= n
 
     def alloc(self, n: int) -> Optional[List[int]]:
+        if faults.fires("paged.alloc", n=n, free=len(self._free)):
+            # injected transient allocation failure: report exhaustion;
+            # the engine defers the admission instead of crashing
+            return None
         if len(self._free) < n:
             return None
         got = self._free[-n:]

@@ -28,11 +28,17 @@ class SamplingParams:
     * ``temperature`` — placeholder for future stochastic sampling; only
       ``0.0`` (greedy argmax) is implemented, and the engine raises on
       anything else rather than silently ignoring it.
+    * ``ttl_s`` — per-request deadline: seconds after submit by which the
+      request must *finish*.  An expired request is evicted (or never
+      admitted) with ``status == "deadline_exceeded"`` and whatever tokens
+      it produced; ``None`` falls back to ``EngineConfig.default_ttl_s``
+      (no deadline when that is also ``None``).
     """
 
     max_new_tokens: int = 16
     eos_id: int = -1
     temperature: float = 0.0
+    ttl_s: Optional[float] = None
 
     def validate(self) -> None:
         if self.max_new_tokens < 1:
@@ -40,6 +46,8 @@ class SamplingParams:
         if self.temperature != 0.0:
             raise NotImplementedError(
                 "only greedy decoding (temperature=0.0) is implemented")
+        if self.ttl_s is not None and self.ttl_s <= 0:
+            raise ValueError(f"ttl_s must be > 0, got {self.ttl_s}")
 
 
 @dataclasses.dataclass
@@ -65,6 +73,17 @@ class EngineConfig:
       records) for A/B measurement.
     * ``use_disk_cache`` — let the engine's compilation cache persist
       tilings + the bucket manifest to disk so the next boot warm-starts.
+    * ``max_queue`` — bounded admission queue: when more than this many
+      requests are pending (submitted but not yet admitted), ``submit()``
+      sheds the request (returns ``False``, ``status == "shed"``, a
+      ``shed`` event) instead of growing the queue without bound.
+      ``None`` keeps the queue unbounded.
+    * ``default_ttl_s`` — engine-wide deadline applied to requests whose
+      ``SamplingParams.ttl_s`` is ``None``.
+    * ``max_retries`` — how many times a request evicted by a device-step
+      failure is requeued before it is failed (``retry_exhausted``).
+    * ``quarantine_backoff_s`` — base backoff of the compile-failure
+      quarantine (doubles per consecutive failure).
     """
 
     slots: int = 8
@@ -77,6 +96,10 @@ class EngineConfig:
     interpret: bool = True
     use_stripe_decode: bool = True
     use_disk_cache: bool = False
+    max_queue: Optional[int] = None
+    default_ttl_s: Optional[float] = None
+    max_retries: int = 2
+    quarantine_backoff_s: float = 0.25
 
     def validate(self) -> None:
         if self.slots < 1:
@@ -92,6 +115,15 @@ class EngineConfig:
             raise ValueError(
                 f"pages={self.pages} cannot hold even one full sequence "
                 f"({self.pages_per_slot} pages)")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.default_ttl_s is not None and self.default_ttl_s <= 0:
+            raise ValueError(f"default_ttl_s must be > 0, got {self.default_ttl_s}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.quarantine_backoff_s <= 0:
+            raise ValueError(
+                f"quarantine_backoff_s must be > 0, got {self.quarantine_backoff_s}")
 
     @property
     def pages_per_slot(self) -> int:
@@ -121,11 +153,22 @@ class Request:
     sampling: Optional[SamplingParams] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # terminal outcome: "ok" (finished normally), "shed" (rejected by the
+    # bounded queue), "deadline_exceeded" (TTL expired queued or mid-
+    # decode), "failed" (prep error / retries exhausted)
+    status: str = "ok"
+    retries: int = 0
+    error: str = ""
     # engine-filled timing/placement (seconds on time.perf_counter's clock)
     submit_time: float = 0.0
     first_token_time: float = 0.0
     finish_time: float = 0.0
+    deadline: float = 0.0  # absolute finish-by time; 0.0 = no deadline
     slot: int = -1
+    # crash-safe retry bookkeeping: tokens already emitted to the caller
+    # before the failure; the retried incarnation regenerates and verifies
+    # them (greedy decode is deterministic) without re-emitting
+    replay_len: int = 0
 
     def __post_init__(self) -> None:
         if self.sampling is None:

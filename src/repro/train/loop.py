@@ -4,8 +4,9 @@
 * periodic + final atomic checkpoints (async writer),
 * automatic restore-on-start (resume is bit-exact: the pipeline state and
   RNG live in the checkpoint),
-* a ``FaultInjector`` hook used by tests to simulate preemption/node
-  failure mid-run,
+* the ``train.step`` fault-injection site (:mod:`repro.reliability.faults`)
+  used by tests to simulate preemption/node failure mid-run — the legacy
+  ``FaultInjector`` class survives as a thin shim over it,
 * a step-time watchdog that flags stragglers (slow steps) and records
   them for exclusion/rebalance at the next restart.
 """
@@ -21,6 +22,7 @@ import numpy as np
 
 from ..data.pipeline import DataConfig, DataPipeline, PipelineState
 from ..optim import adamw
+from ..reliability import faults
 from . import checkpoint as ckpt
 
 
@@ -35,16 +37,28 @@ class TrainConfig:
 
 
 class FaultInjector:
-    """Raises at a chosen step (tests: simulated preemption)."""
+    """Raises at a chosen step (tests: simulated preemption).
+
+    Deprecated compat shim over :mod:`repro.reliability.faults` — it
+    builds a one-shot ``train.step`` rule and checks it directly, so old
+    call sites (``Trainer.run(fault=...)``) keep working while new code
+    installs plans with ``faults.inject(...)``."""
 
     def __init__(self, fail_at_step: Optional[int] = None):
         self.fail_at_step = fail_at_step
-        self.fired = False
+        self._rule = (faults.fail_when(
+            "train.step", lambda ctx: ctx["step"] == fail_at_step)
+            if fail_at_step is not None else None)
+        self._plan = (faults.FaultPlan([self._rule])
+                      if self._rule is not None else None)
+
+    @property
+    def fired(self) -> bool:
+        return self._rule is not None and self._rule.fired > 0
 
     def check(self, step: int) -> None:
-        if self.fail_at_step is not None and step == self.fail_at_step and not self.fired:
-            self.fired = True
-            raise RuntimeError(f"injected fault at step {step}")
+        if self._plan is not None:
+            self._plan.hit("train.step", step=step)
 
 
 class StragglerWatchdog:
@@ -120,6 +134,9 @@ class Trainer:
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             if fault is not None:
                 fault.check(self.step)
+            # ambient fault plans (faults.inject) hit the same site without
+            # threading an injector through the call stack
+            faults.check("train.step", step=self.step)
             self.params, self.opt_state, metrics = self.train_step(
                 self.params, self.opt_state, batch)
             loss = float(metrics["loss"])

@@ -110,6 +110,37 @@ def test_disk_corrupt_entry_recovery(tmp_path):
     assert c.stats.disk_errors == 2
 
 
+def test_disk_writes_are_atomic_no_partial_files(tmp_path):
+    # writes go through a same-directory temp file + os.replace, so a
+    # reader never observes a half-written entry and no temp litter stays
+    c = CompilationCache(disk_dir=tmp_path)
+    key = content_key("atomic")
+    c.put_disk(key, {"v": list(range(1000))})
+    names = [p.name for p in tmp_path.iterdir()]
+    assert names == [f"{key}.json"], f"unexpected files next to the entry: {names}"
+    assert c.get_disk(key) == {"v": list(range(1000))}
+
+
+def test_torn_disk_write_recovered(tmp_path):
+    # simulate a non-atomic writer (the cache.disk_write_torn fault site
+    # truncates the payload in place): the torn entry must read as a miss,
+    # count as a disk error, be deleted, and be rewritable
+    from repro.reliability import faults
+
+    c = CompilationCache(disk_dir=tmp_path)
+    key = content_key("torn")
+    with faults.inject(faults.fail_nth("cache.disk_write_torn", 1)):
+        c.put_disk(key, {"tilings": {"op0": {"x": 3}}})
+    raw = (tmp_path / f"{key}.json").read_text()
+    with pytest.raises(json.JSONDecodeError):
+        json.loads(raw)
+    assert c.get_disk(key) is None, "torn entry must degrade to a miss"
+    assert c.stats.disk_errors >= 1
+    assert not (tmp_path / f"{key}.json").exists(), "torn entry must be removed"
+    c.put_disk(key, {"tilings": {"op0": {"x": 3}}})
+    assert c.get_disk(key) == {"tilings": {"op0": {"x": 3}}}
+
+
 def test_cache_disable_env(tmp_path, monkeypatch):
     monkeypatch.setenv("STRIPE_CACHE_DISABLE", "1")
     c = CompilationCache(disk_dir=tmp_path)

@@ -1,0 +1,339 @@
+"""Chaos tests for the serving engine's resilience layer: prep-thread
+supervision, compile quarantine with jnp-fallback serving, crash-safe
+decode-step retry with exactly-once output, deadlines, bounded-queue load
+shedding under overload, and page-allocation failures."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.build import build_model
+from repro.reliability import faults
+from repro.serving import EngineConfig, Request, SamplingParams, ServingEngine
+
+
+def _tiny_cfg():
+    return configs.get("llama3-8b").scaled(n_layers=2, d_model=32, n_heads=2,
+                                           n_kv_heads=2, d_ff=64, vocab=64,
+                                           head_dim=16, vocab_pad_multiple=16)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(_tiny_cfg())
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    import jax
+    return model.init(jax.random.PRNGKey(0))
+
+
+def _mk_requests(cfg, plens, new=6, base_uid=0, seed=3, **samp):
+    r = np.random.RandomState(seed)
+    return [Request(uid=base_uid + i,
+                    prompt=r.randint(1, cfg.vocab, size=p).astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=new, **samp))
+            for i, p in enumerate(plens)]
+
+
+def _engine(model, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("page_size", 8)
+    return ServingEngine(model, EngineConfig(**kw))
+
+
+def _baseline_tokens(model, params, plens, new=6, seed=3):
+    eng = _engine(model)
+    for r in _mk_requests(model.cfg, plens, new=new, seed=seed):
+        eng.submit(r)
+    done = eng.run(params, max_steps=4096)
+    return {r.uid: list(r.out_tokens) for r in done}
+
+
+def _events_of(eng, name):
+    return [e for e in eng.events() if e["event"] == name]
+
+
+# ------------------------------------------------------ prep supervision
+def test_prep_item_fault_fails_request_thread_survives(model, params):
+    with faults.inject(faults.fail_nth("serve.prep", 2)):
+        eng = _engine(model)
+        for r in _mk_requests(model.cfg, [4, 7, 9, 5]):
+            eng.submit(r)
+        done = eng.run(params, max_steps=4096)
+    by_uid = {r.uid: r for r in done}
+    assert sorted(by_uid) == [0, 1, 2, 3], "every request must reach a terminal state"
+    assert by_uid[1].status == "failed"
+    assert "InjectedFault" in by_uid[1].error
+    assert all(by_uid[u].status == "ok" and by_uid[u].out_tokens
+               for u in (0, 2, 3))
+    assert _events_of(eng, "prep_failed")
+    # the worker survived: the engine keeps serving
+    eng.submit(_mk_requests(model.cfg, [6], base_uid=10)[0])
+    done2 = eng.run(params, max_steps=4096)
+    assert done2 and done2[0].status == "ok"
+
+
+def test_prep_thread_death_detected_fast_and_restarted(model, params):
+    # regression for the old 10s-timeout stall: a dying worker must hand
+    # its exception back under the condition variable, immediately
+    with faults.inject(faults.fail_nth("serve.prep_thread", 1)):
+        eng = _engine(model)
+        for r in _mk_requests(model.cfg, [4, 7, 9]):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        done = eng.run(params, max_steps=4096)
+        detect = time.perf_counter() - t0
+    assert detect < 5.0, f"thread death took {detect:.1f}s to surface (old bug: 10s stall)"
+    by_uid = {r.uid: r for r in done}
+    assert sorted(by_uid) == [0, 1, 2]
+    # prep is side-effect-free: the in-flight request is requeued through
+    # the restarted worker and completes like everything else
+    assert all(by_uid[u].status == "ok" and by_uid[u].out_tokens
+               for u in (0, 1, 2))
+    assert by_uid[0].retries == 1
+    restarts = _events_of(eng, "prep_thread_restart")
+    assert restarts and "InjectedFault" in restarts[0]["error"], \
+        "worker's exception must be attached to the restart event"
+    assert restarts[0]["requeued_uid"] == 0
+    assert eng.metrics()["prep_restarts"] == 1
+
+
+def test_prep_thread_death_retries_exhausted_fails_request(model, params):
+    # a request that kills the worker every time it is prepped burns its
+    # retry budget and fails; the engine stays up
+    rule = faults.fail_when("serve.prep_thread",
+                            lambda ctx: ctx["uid"] == 1)
+    rule.times = None
+    with faults.inject(rule):
+        eng = _engine(model, max_retries=1)
+        for r in _mk_requests(model.cfg, [4, 7, 9]):
+            eng.submit(r)
+        done = {r.uid: r for r in eng.run(params, max_steps=4096)}
+    assert done[1].status == "failed"
+    assert "InjectedFault" in done[1].error
+    assert done[0].status == "ok" and done[2].status == "ok"
+    assert eng.metrics()["prep_restarts"] == 2  # initial try + 1 retry
+
+
+# ------------------------------------------------- crash-safe decode step
+def test_decode_step_crash_replays_exactly_once(model, params):
+    plens = [3, 8, 13, 5]
+    want = _baseline_tokens(model, params, plens)
+    with faults.inject(faults.fail_nth("serve.decode_step", 3)):
+        eng = _engine(model)
+        streamed = []
+        reqs = _mk_requests(model.cfg, plens)
+        for r in reqs:
+            eng.submit(r)
+        for uid, tok in eng.generate([], params=params):
+            streamed.append((uid, tok))
+        done = {r.uid: r for r in reqs}
+    assert _events_of(eng, "device_step_failed")
+    assert _events_of(eng, "requeue")
+    for uid, toks in want.items():
+        assert list(done[uid].out_tokens) == toks, \
+            f"uid {uid}: retried request diverged from fault-free run"
+        assert done[uid].status == "ok"
+    # exactly-once on the stream: each request's tokens appear once, in order
+    for uid, toks in want.items():
+        got = [t for u, t in streamed if u == uid]
+        assert got == toks, f"uid {uid}: stream not exactly-once"
+
+
+def test_decode_step_crash_scoped_to_payload_slots(model, params):
+    plens = [4, 9, 6, 11]
+    want = _baseline_tokens(model, params, plens, new=8)
+    rule = faults.fail_nth("serve.decode_step", 2, payload={"slots": [0]})
+    with faults.inject(rule):
+        eng = _engine(model)
+        for r in _mk_requests(model.cfg, plens, new=8):
+            eng.submit(r)
+        done = {r.uid: r for r in eng.run(params, max_steps=4096)}
+    ev = _events_of(eng, "device_step_failed")
+    assert ev and ev[0]["slots"] == [0], "only the scripted slot is affected"
+    assert len(_events_of(eng, "requeue")) == 1
+    for uid, toks in want.items():
+        assert list(done[uid].out_tokens) == toks
+        assert done[uid].status == "ok"
+
+
+def test_retries_exhausted_fails_request_without_hanging(model, params):
+    # every decode step fails: requests burn max_retries then fail; the
+    # engine must converge (no infinite requeue loop)
+    with faults.inject(faults.fail_every("serve.decode_step", 1, times=None)):
+        eng = _engine(model, max_retries=1)
+        for r in _mk_requests(model.cfg, [4, 7]):
+            eng.submit(r)
+        done = eng.run(params, max_steps=4096)
+    assert len(done) == 2
+    for r in done:
+        assert r.status == "failed"
+        assert "retries exhausted" in r.error
+        assert len(r.out_tokens) == 1, "only the prefill token was produced"
+    assert _events_of(eng, "retry_exhausted")
+    assert eng.metrics()["finished_by_status"]["failed"] == 2
+
+
+# ------------------------------------------------------------- deadlines
+def test_queued_deadline_never_occupies_a_slot(model, params):
+    eng = _engine(model, slots=1)
+    r1, r2 = _mk_requests(model.cfg, [5, 6], new=8)
+    eng.submit(r1)
+    eng.submit(r2)
+    r2.deadline = time.perf_counter() - 1.0  # already expired in the queue
+    done = {r.uid: r for r in eng.run(params, max_steps=4096)}
+    assert done[r2.uid].status == "deadline_exceeded"
+    assert done[r2.uid].out_tokens == [], "expired queued request never ran"
+    assert done[r1.uid].status == "ok"
+    assert not any(e["event"] == "admit" and e["uid"] == r2.uid
+                   for e in eng.events()), "expired request must not take a slot"
+    ev = _events_of(eng, "deadline_exceeded")
+    assert ev and ev[0]["where"] == "queued"
+
+
+def test_mid_decode_deadline_evicts_with_partial_output(model, params):
+    eng = _engine(model)
+    (r,) = _mk_requests(model.cfg, [5], new=30)
+    eng.submit(r)
+    eng.run(params, max_steps=3)  # admit + a few decode steps
+    assert not r.done and len(r.out_tokens) >= 1
+    r.deadline = time.perf_counter() - 1.0
+    done = eng.run(params, max_steps=4096)
+    assert [x.uid for x in done] == [r.uid]
+    assert r.status == "deadline_exceeded"
+    assert 1 <= len(r.out_tokens) < 30, "partial output stands"
+    ev = _events_of(eng, "deadline_exceeded")
+    assert ev and ev[0]["where"] == "slot"
+    assert eng.metrics()["free_pages"] == eng.config.pool_pages, \
+        "evicted deadline request must release its pages"
+
+
+def test_ttl_end_to_end(model, params):
+    eng = _engine(model, default_ttl_s=0.001)
+    for r in _mk_requests(model.cfg, [4, 6]):
+        eng.submit(r)
+    time.sleep(0.05)
+    done = eng.run(params, max_steps=4096)
+    assert len(done) == 2
+    assert all(r.status == "deadline_exceeded" for r in done)
+
+
+# ------------------------------------------------------ compile quarantine
+def test_bucket_quarantine_serves_fallback_same_step(model, params):
+    plens = [5, 6, 7]  # one bucket (8)
+    want = _baseline_tokens(model, params, plens)
+    with faults.inject(faults.fail_nth("serve.prefill_compile", 1)):
+        eng = _engine(model, quarantine_backoff_s=30.0)
+        for r in _mk_requests(model.cfg, plens):
+            eng.submit(r)
+        done = {r.uid: r for r in eng.run(params, max_steps=4096)}
+    # the compile failed, yet every request completed with correct tokens
+    # on the same serve call — degraded throughput, not degraded output
+    for uid, toks in want.items():
+        assert done[uid].status == "ok"
+        assert list(done[uid].out_tokens) == toks
+    q = _events_of(eng, "quarantine")
+    assert len(q) == 1 and q[0]["bucket"] == 8 and "InjectedFault" in q[0]["reason"]
+    assert any(c["kind"] == "prefill_fallback" for c in eng.compile_log())
+    assert eng.metrics()["quarantined"] == 1
+    assert eng.cache_stats().quarantined == 1
+    assert eng.cache_stats().quarantine_hits >= 1, \
+        "later admissions of the bucket must hit the embargo, not recompile"
+    assert list(eng.quarantine_entries().values())[0]["fail_count"] == 1
+
+
+def test_bucket_quarantine_expiry_recompiles_and_clears(model, params):
+    with faults.inject(faults.fail_nth("serve.prefill_compile", 1)):
+        eng = _engine(model, quarantine_backoff_s=30.0)
+        for r in _mk_requests(model.cfg, [5, 6]):
+            eng.submit(r)
+        eng.run(params, max_steps=4096)
+        assert eng.metrics()["quarantined"] == 1
+        # force the embargo to lapse (deterministic, no sleep)
+        for e in eng._quarantine.entries().values():
+            e.until = 0.0
+        for r in _mk_requests(model.cfg, [7], base_uid=10):
+            eng.submit(r)
+        done = eng.run(params, max_steps=4096)
+    assert done[0].status == "ok"
+    assert _events_of(eng, "quarantine_expired")
+    assert _events_of(eng, "quarantine_clear")
+    assert eng.metrics()["quarantined"] == 0
+    assert eng.cache_stats().quarantine_clears == 1
+    assert any(k.startswith("prefill_L8/") for k in eng.compile_records()), \
+        "recovered bucket must compile through stripe for real"
+
+
+# ------------------------------------------------------------ page allocs
+def test_alloc_fault_defers_admission(model, params):
+    with faults.inject(faults.fail_nth("paged.alloc", 1)):
+        eng = _engine(model)
+        for r in _mk_requests(model.cfg, [4, 9]):
+            eng.submit(r)
+        done = eng.run(params, max_steps=4096)
+    assert all(r.status == "ok" for r in done) and len(done) == 2
+    assert _events_of(eng, "alloc_failed")
+
+
+# ------------------------------------------------- overload / load shedding
+def test_overload_sheds_bounded_queue_no_lost_or_duplicated(model, params):
+    # Satellite: open-loop feeder at ~4x the sustainable rate against a
+    # bounded queue.  Sheds must happen; every admitted request finishes
+    # exactly once; admitted latency stays bounded by the queue cap.
+    cfg = model.cfg
+    # measure sustainable throughput (warm compiles first)
+    warm = _engine(model)
+    for r in _mk_requests(cfg, [6] * 4, new=4):
+        warm.submit(r)
+    warm.run(params, max_steps=4096)
+    t0 = time.perf_counter()
+    for r in _mk_requests(cfg, [6] * 8, new=4, base_uid=100):
+        warm.submit(r)
+    warm.run(params, max_steps=4096)
+    per_req = (time.perf_counter() - t0) / 8
+
+    n, max_queue = 80, 6
+    eng = _engine(model, max_queue=max_queue)
+    # warm this engine's compiles so admitted latency is steady-state
+    for r in _mk_requests(cfg, [6] * 2, new=4, base_uid=5000):
+        eng.submit(r)
+    eng.run(params, max_steps=4096)
+
+    reqs = _mk_requests(cfg, [6] * n, new=4, seed=11)
+    accepted, shed = [], []
+    stop = threading.Event()
+
+    def feeder():
+        for r in reqs:
+            (accepted if eng.submit(r) else shed).append(r)
+            time.sleep(per_req / 4)  # 4x sustainable arrival rate
+        stop.set()
+
+    th = threading.Thread(target=feeder)
+    th.start()
+    finished = []
+    while not stop.is_set() or any(not r.done for r in accepted):
+        finished.extend(eng.run(params, max_steps=200))
+    th.join()
+
+    assert shed, "4x overload against a bounded queue must shed"
+    assert len(accepted) + len(shed) == n
+    fin_uids = [r.uid for r in finished if r.uid < 5000]
+    assert sorted(fin_uids) == sorted(r.uid for r in accepted), \
+        "every admitted request finishes; no shed request leaks in"
+    assert len(fin_uids) == len(set(fin_uids)), "no duplicated completions"
+    for r in accepted:
+        assert r.status == "ok" and len(r.out_tokens) == 4
+    assert {r.uid for r in eng.shed()} >= {r.uid for r in shed}
+    assert len(_events_of(eng, "shed")) == len(shed)
+    # bounded latency: an admitted request waits at most on the queue cap
+    # plus the in-flight slots (generous 10x margin for scheduling noise)
+    lat = sorted(r.latency for r in accepted)
+    p99 = lat[int(0.99 * (len(lat) - 1))]
+    bound = 10 * per_req * (max_queue + eng.slots + 2)
+    assert p99 < bound, f"admitted p99 {p99:.3f}s exceeds bound {bound:.3f}s"

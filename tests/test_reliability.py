@@ -1,0 +1,188 @@
+"""Fault-injection framework: rule scheduling, determinism, plan
+stacking, cross-thread visibility; plus the injection sites wired into
+the compilation cache, the stripe_jit driver (compile quarantine), and
+the training loop (FaultInjector compat shim)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import CompilationCache, single_op_program, stripe_jit
+from repro.core.cache import QuarantineStore, content_key
+from repro.core.hwconfig import CPU_TEST
+from repro.reliability import faults
+
+
+# ------------------------------------------------------------- framework
+def test_fail_nth_fires_exactly_once_on_nth_hit():
+    with faults.inject(faults.fail_nth("train.step", 3)) as plan:
+        fired_at = []
+        for step in range(6):
+            try:
+                faults.check("train.step", step=step)
+            except faults.InjectedFault as e:
+                fired_at.append(step)
+                assert e.site == "train.step"
+                assert e.ctx == {"step": step}
+    assert fired_at == [2]  # nth is 1-based over hits
+    assert plan.fired_counts() == {"train.step": 1}
+    assert plan.fired()[0]["hit"] == 3
+
+
+def test_fail_every_with_times_bound():
+    with faults.inject(faults.fail_every("train.step", 2, times=2)) as plan:
+        hits = [faults.fires("train.step", step=i) for i in range(10)]
+    assert hits == [False, True, False, True] + [False] * 6
+    assert plan.fired_counts()["train.step"] == 2
+
+
+def test_fail_prob_is_deterministic_under_seed():
+    def run(seed):
+        with faults.inject(faults.fail_prob("serve.decode_step", 0.3,
+                                            seed=seed, times=None)):
+            return [faults.fires("serve.decode_step", step=i)
+                    for i in range(200)]
+    a, b = run(7), run(7)
+    assert a == b, "same seed must fire identically"
+    assert 20 < sum(a) < 120, "p=0.3 over 200 hits should fire a sane count"
+    assert run(8) != a, "different seed should differ"
+
+
+def test_when_predicate_and_payload():
+    rule = faults.fail_when("serve.decode_step",
+                            lambda ctx: ctx["step"] >= 5,
+                            payload={"slots": [1]})
+    with faults.inject(rule):
+        assert not faults.fires("serve.decode_step", step=4)
+        with pytest.raises(faults.InjectedFault) as ei:
+            faults.check("serve.decode_step", step=5)
+    assert ei.value.payload == {"slots": [1]}
+    assert isinstance(ei.value, RuntimeError)  # legacy handlers keep working
+
+
+def test_unknown_site_rejected():
+    with pytest.raises(KeyError):
+        faults.fail_nth("serve.nonexistent", 1)
+    with faults.inject(faults.fail_nth("train.step", 1)):
+        with pytest.raises(KeyError):
+            faults.check("not.a.site")
+    # without active plans check() is a no-op even for unknown sites
+    faults.check("not.a.site")
+
+
+def test_wildcard_site_pattern_and_plan_stacking():
+    outer = faults.FaultPlan([faults.fail_every("serve.*", 1, times=None)])
+    with faults.inject(outer):
+        assert faults.fires("serve.prep", uid=1)
+        with faults.inject(faults.fail_nth("train.step", 1)) as inner:
+            assert faults.fires("train.step", step=0)
+            assert faults.fires("serve.decode_step", step=0)  # outer still active
+        assert inner.fired_counts() == {"train.step": 1}
+    assert not faults.fires("serve.prep", uid=2), "plan must uninstall on exit"
+    assert outer.fired_counts()["serve.prep"] == 1
+
+
+def test_plans_visible_across_threads():
+    seen = []
+
+    def worker():
+        seen.append(faults.fires("serve.prep", uid=0))
+
+    with faults.inject(faults.fail_nth("serve.prep", 1)):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    assert seen == [True], "prep-thread-style workers must observe the plan"
+
+
+# ------------------------------------------------------- quarantine store
+def test_quarantine_backoff_doubles_and_expiry_permits_retry():
+    q = QuarantineStore(base_backoff_s=0.05, max_backoff_s=1.0)
+    e1 = q.record_failure("k", "boom")
+    assert e1.backoff_s == pytest.approx(0.05)
+    assert q.active("k"), "embargo must hold right after the failure"
+    time.sleep(0.06)
+    assert not q.active("k"), "expiry must permit a retry"
+    assert q.get("k").expired
+    assert q.stats.quarantine_expiries == 1
+    e2 = q.record_failure("k", "boom again")  # failed retry doubles backoff
+    assert e2.backoff_s == pytest.approx(0.1)
+    assert e2.fail_count == 2
+    assert q.clear("k")
+    assert q.get("k") is None
+    assert q.stats.quarantine_clears == 1
+
+
+# ------------------------------------------------------------ cache sites
+def test_disk_read_fault_degrades_to_miss(tmp_path):
+    c = CompilationCache(disk_dir=tmp_path)
+    c.put_disk("k", {"v": 1})
+    with faults.inject(faults.fail_nth("cache.disk_read", 1)):
+        assert c.get_disk("k") is None, "injected read error must read as a miss"
+    assert c.stats.disk_errors == 1
+    assert c.get_disk("k") == {"v": 1}, "the entry itself must be intact"
+
+
+def test_disk_write_fault_loses_entry_without_crashing(tmp_path):
+    c = CompilationCache(disk_dir=tmp_path)
+    with faults.inject(faults.fail_nth("cache.disk_write", 1)):
+        c.put_disk("k", {"v": 1})
+    assert c.get_disk("k") is None
+    assert c.stats.disk_errors == 1
+    c.put_disk("k", {"v": 2})
+    assert c.get_disk("k") == {"v": 2}
+
+
+# -------------------------------------------------- driver quarantine
+def _mm_kwargs():
+    return dict(tensors={"A": ((32, 16), "float32"), "B": ((16, 24), "float32"),
+                         "O": ((32, 24), "float32")}, out="O")
+
+
+def test_stripe_jit_compile_crash_quarantines_and_recovers(tmp_path):
+    cache = CompilationCache(disk_dir=tmp_path)
+    cache.quarantine.base_backoff_s = 60.0  # hold the embargo for the test
+    rng = np.random.RandomState(0)
+    arrays = {"A": rng.randn(32, 16).astype(np.float32),
+              "B": rng.randn(16, 24).astype(np.float32)}
+    want = arrays["A"] @ arrays["B"]
+
+    with faults.inject(faults.fail_nth("compile.stripe_jit", 1)):
+        cp = stripe_jit("O[i, j] += A[i, c] * B[c, j]", CPU_TEST, "pallas",
+                        cache=cache, **_mm_kwargs())
+    # the crash is absorbed: same call, same result, jnp fallback + quarantine
+    assert cp.record.quarantined
+    assert "compile crashed" in cp.record.fallback_reason
+    np.testing.assert_allclose(np.asarray(cp(arrays)["O"]), want,
+                               rtol=1e-4, atol=1e-5)
+    assert cache.stats.quarantined == 1
+
+    # while embargoed, the cached entry keeps serving the fallback
+    cp2 = stripe_jit("O[i, j] += A[i, c] * B[c, j]", CPU_TEST, "pallas",
+                     cache=cache, **_mm_kwargs())
+    assert cp2.record.quarantined
+    assert cache.stats.quarantine_hits >= 1
+
+    # after the embargo lapses the next call re-attempts and recovers
+    # (forced expiry: deterministic, no sleep)
+    cache.quarantine.get(cp.record.key).until = 0.0
+    cp3 = stripe_jit("O[i, j] += A[i, c] * B[c, j]", CPU_TEST, "pallas",
+                     cache=cache, **_mm_kwargs())
+    assert not cp3.record.quarantined, "post-embargo retry must recompile"
+    assert cache.stats.quarantine_clears == 1
+    np.testing.assert_allclose(np.asarray(cp3(arrays)["O"]), want,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_unsupported_pallas_is_not_quarantined(tmp_path):
+    # a deterministic legality fallback is not a crash: no quarantine entry
+    cache = CompilationCache(disk_dir=tmp_path)
+    prog = single_op_program(
+        "O[x] += I[x + i - 1] * F[i]",
+        {"I": ((12,), "float32"), "F": ((3,), "float32"), "O": ((12,), "float32")},
+        out="O")
+    cp = stripe_jit(prog, CPU_TEST, "pallas", cache=cache)
+    _ = cp  # compiled (hybrid may fall back per-block); never quarantined
+    assert cache.stats.quarantined == 0
+    assert not cp.record.quarantined

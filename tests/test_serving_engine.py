@@ -260,3 +260,35 @@ def test_non_dense_family_rejected(params):
     model = build_model(cfg)
     with pytest.raises(ValueError, match="WaveEngine"):
         ServingEngine(model, EngineConfig(slots=2, max_len=32))
+
+
+# ----------------------------------------------------- resilience contract
+def test_submit_accepts_and_statuses_default_ok(model, params):
+    # without max_queue/ttl the resilience layer is invisible: submit()
+    # returns True, nothing sheds, every request finishes status "ok"
+    eng = _engine(model)
+    for r in _mk_requests(model.cfg, [4, 9, 6]):
+        assert eng.submit(r) is True
+    done = eng.run(params, max_steps=4096)
+    assert all(r.status == "ok" and r.error == "" and r.retries == 0
+               for r in done)
+    assert eng.shed() == []
+    m = eng.metrics()
+    assert m["shed"] == 0 and m["retries"] == 0 and m["quarantined"] == 0
+    assert m["finished_by_status"] == {"ok": 3}
+
+
+def test_bounded_queue_sheds_synchronously(model, params):
+    eng = _engine(model, slots=1, max_queue=2)
+    reqs = _mk_requests(model.cfg, [4, 5, 6, 7])
+    results = [eng.submit(r) for r in reqs]
+    # prep drains fast, so at least the request submitted against a full
+    # queue is shed; shed requests never reach the engine
+    assert results[0] is True
+    assert not all(results), "queue of 2 must shed some of 4 rapid submits"
+    done = eng.run(params, max_steps=4096)
+    shed_uids = {r.uid for r in eng.shed()}
+    assert {r.uid for r in done}.isdisjoint(shed_uids)
+    assert {r.uid for r in done} | shed_uids == {r.uid for r in reqs}
+    for r in eng.shed():
+        assert r.status == "shed" and r.done and r.out_tokens == []
