@@ -20,9 +20,17 @@ with *exactly-once, token-identical* output, that every injected fault is
 matched by a recovery/degradation event in ``engine.events()``, and that
 faulted throughput stays within 70% of fault-free.
 
+``--trace OUT.json`` records the run as spans (request lifecycle, decode
+steps, prep work) and writes a Chrome/Perfetto trace; with tracing on,
+the continuous leg also reports the mean per-request latency breakdown
+(queue wait vs prefill vs decode) computed from those spans.
+``--profile`` compiles the engine's Stripe decode programs with
+``profile=True`` (per-unit measured latencies + cost-model residual rows).
+
     PYTHONPATH=src python benchmarks/serve_traffic.py --requests 1000
     PYTHONPATH=src python benchmarks/serve_traffic.py --json OUT.json
     PYTHONPATH=src python benchmarks/serve_traffic.py --faults --json OUT.json
+    PYTHONPATH=src python benchmarks/serve_traffic.py --trace trace.json
 """
 import argparse
 import json
@@ -34,7 +42,7 @@ from typing import Any, Dict, List
 import jax
 import numpy as np
 
-from repro import api
+from repro import api, obs
 from repro.core.cache import CompilationCache
 from repro.reliability import faults
 
@@ -90,6 +98,24 @@ def drive(eng, params, arrivals, reqs) -> Dict[str, Any]:
         "slot_utilization": (round(eng.metrics()["slot_utilization"], 3)
                              if isinstance(eng, api.ServingEngine) else None),
     }
+
+
+def span_breakdown() -> Dict[str, Any]:
+    """Mean per-request latency breakdown (queue/prefill/decode seconds)
+    from the serving spans currently in the default tracer."""
+    events = obs.get_tracer().chrome_trace()["traceEvents"]
+    per = obs.trace.request_breakdown(events)
+    if not per:
+        return {}
+
+    def mean(k):
+        return sum(r[k] for r in per.values()) / len(per)
+
+    return {"requests": len(per),
+            "queue_s": round(mean("queue_s"), 5),
+            "prefill_s": round(mean("prefill_s"), 5),
+            "decode_s": round(mean("decode_s"), 5),
+            "total_s": round(mean("total_s"), 5)}
 
 
 def _fault_plan(args) -> faults.FaultPlan:
@@ -208,12 +234,22 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=250.0,
                     help="Poisson arrival rate, req/s (0 = all queued at t=0)")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record spans and write a Chrome/Perfetto trace; "
+                         "also reports the span-derived per-request latency "
+                         "breakdown for the continuous engine")
+    ap.add_argument("--profile", action="store_true",
+                    help="compile the engine's Stripe decode programs with "
+                         "profile=True (measured per-unit latencies + "
+                         "cost-model residual rows)")
     ap.add_argument("--faults", action="store_true",
                     help="run the chaos leg (fault injection) instead of "
                          "the continuous-vs-wave comparison")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the continuous-beats-wave assertions")
     args = ap.parse_args(argv)
+    if args.trace:
+        obs.enable_tracing()
 
     cfg = api.configs.get("llama3-8b").scaled(
         d_model=64, n_layers=2, n_heads=4, n_kv_heads=2, d_ff=128,
@@ -228,11 +264,15 @@ def main(argv=None):
             with open(args.json, "w") as f:
                 json.dump(results, f, indent=2)
             print(f"# wrote {args.json}")
+        if args.trace:
+            obs.export_chrome_trace(args.trace)
+            print(f"# wrote {args.trace} ({len(obs.spans())} spans)")
         return
 
     engines = (
         ("continuous", api.ServingEngine(model, api.EngineConfig(
-            slots=args.slots, max_len=args.max_len, page_size=args.page_size))),
+            slots=args.slots, max_len=args.max_len, page_size=args.page_size,
+            profile=args.profile))),
         ("wave", api.WaveEngine(model, args.slots, args.max_len)),
     )
     for label, eng in engines:
@@ -242,8 +282,18 @@ def main(argv=None):
             eng.submit(r)
         eng.run(params, max_steps=1_000_000)
 
+        if args.trace and label == "continuous":
+            obs.clear_trace()  # keep warm-up spans out of the breakdown
         arrivals, reqs = make_requests(cfg, args.requests, seed=7, rate=args.rate)
         res = drive(eng, params, arrivals, reqs)
+        if args.trace and label == "continuous":
+            bd = res["latency_breakdown"] = span_breakdown()
+            if bd:
+                print(f"continuous latency breakdown (mean over "
+                      f"{bd['requests']} requests): "
+                      f"queue {bd['queue_s']*1e3:.1f} ms, "
+                      f"prefill {bd['prefill_s']*1e3:.1f} ms, "
+                      f"decode {bd['decode_s']*1e3:.1f} ms")
         results[label] = res
         print(f"{label:11s}: {res['tok_per_s']:8.0f} tok/s  "
               f"p50 {res['p50_s']*1e3:7.1f} ms  p99 {res['p99_s']*1e3:7.1f} ms  "
@@ -261,6 +311,9 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)
         print(f"# wrote {args.json}")
+    if args.trace:
+        obs.export_chrome_trace(args.trace)
+        print(f"# wrote {args.trace} ({len(obs.spans())} spans)")
 
 
 if __name__ == "__main__":

@@ -35,10 +35,14 @@ Kernels & training (convenience):
 Reliability:
     ``faults`` (fault-injection module: ``faults.inject``,
     ``faults.fail_nth``, …), ``FaultPlan``, ``InjectedFault``
+Observability:
+    ``obs`` (subpackage: ``obs.span``, ``obs.enable_tracing``,
+    ``obs.export_chrome_trace``, ``obs.metrics_snapshot``,
+    ``obs.read_residuals``, …)
 """
 from __future__ import annotations
 
-from . import configs, explore
+from . import configs, explore, obs
 from .core import (
     CompilationCache,
     CompiledProgram,
@@ -95,4 +99,6 @@ __all__ = [
     "TrainConfig", "Trainer", "DataConfig",
     # reliability
     "faults", "FaultPlan", "InjectedFault",
+    # observability
+    "obs",
 ]

@@ -28,6 +28,7 @@ from collections import OrderedDict
 from pathlib import Path
 from typing import Any, Callable, Dict, Optional
 
+from ..obs import metrics as obs_metrics
 from ..reliability import faults
 
 # v2: tiling-oracle entries are keyed by block name + group fingerprint
@@ -73,26 +74,59 @@ def default_cache_dir() -> Path:
 # --------------------------------------------------------------------------
 # Stats
 # --------------------------------------------------------------------------
-@dataclasses.dataclass
 class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    evictions: int = 0
-    puts: int = 0
-    disk_hits: int = 0
-    disk_misses: int = 0
-    disk_errors: int = 0
-    disk_puts: int = 0
-    # negative-cache (quarantine) traffic: failures recorded, lookups
-    # served degraded because an embargo was active, embargo expiries
-    # (retry allowed again), and successful recoveries
-    quarantined: int = 0
-    quarantine_hits: int = 0
-    quarantine_expiries: int = 0
-    quarantine_clears: int = 0
+    """Cache hit/miss/eviction statistics, backed by an
+    :class:`repro.obs.metrics.Registry`.
+
+    Keeps the original dataclass-of-ints surface (``stats.hits += 1``,
+    ``as_dict()``) so every existing call site and test works unchanged,
+    while each field is a ``cache.<field>`` counter series in a
+    per-instance registry (``stats.registry.snapshot()``).  Increments
+    are additionally mirrored into the process-default registry, so a
+    global ``obs.metrics.snapshot()`` sees cumulative cache traffic
+    across every cache in the process.
+    """
+
+    FIELDS = (
+        "hits", "misses", "evictions", "puts",
+        "disk_hits", "disk_misses", "disk_errors", "disk_puts",
+        # negative-cache (quarantine) traffic: failures recorded, lookups
+        # served degraded because an embargo was active, embargo expiries
+        # (retry allowed again), and successful recoveries
+        "quarantined", "quarantine_hits", "quarantine_expiries",
+        "quarantine_clears",
+    )
+
+    def __init__(self, registry: Optional["obs_metrics.Registry"] = None, **initial):
+        reg = registry if registry is not None else obs_metrics.Registry()
+        object.__setattr__(self, "registry", reg)
+        object.__setattr__(self, "_counters",
+                           {f: reg.counter(f"cache.{f}") for f in self.FIELDS})
+        for k, v in initial.items():
+            setattr(self, k, v)
+
+    def __getattr__(self, name):
+        counters = self.__dict__.get("_counters") or {}
+        if name in counters:
+            return int(counters[name].value)
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value):
+        counters = self.__dict__.get("_counters")
+        if counters is not None and name in counters:
+            delta = int(value) - int(counters[name].value)
+            counters[name].set(int(value))
+            if delta:
+                obs_metrics.counter(f"cache.{name}").inc(delta)
+            return
+        object.__setattr__(self, name, value)
 
     def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+        return {f: int(self._counters[f].value) for f in self.FIELDS}
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{k}={v}" for k, v in self.as_dict().items())
+        return f"CacheStats({inner})"
 
 
 # --------------------------------------------------------------------------

@@ -24,6 +24,8 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
 
+from ..obs import profile as obs_profile
+from ..obs import trace as obs_trace
 from ..reliability import faults
 from . import cache as _cache
 from .frontend import TileProgram, single_op_program
@@ -73,6 +75,18 @@ class CompileRecord:
     # the negative-cache entry (reason, fail_count, backoff_s, expired).
     quarantined: bool = False
     quarantine: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # Kernel profiling (``stripe_jit(..., profile=True)``): per lowering
+    # unit, the cost model's predicted latency (autotile roofline,
+    # summed over the unit's blocks) and the best measured wall time
+    # observed across dispatches.  ``measured_latency_s`` fills in as the
+    # compiled program runs (the dict is shared across cache-hit records
+    # of the same artifact); (predicted, measured) pairs are appended to
+    # the residual JSONL under the cache dir on the first dispatch.
+    profiled: bool = False
+    ir_fingerprint: str = ""
+    hw_fingerprint: str = ""
+    predicted_latency_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    measured_latency_s: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def fusion_decisions(self) -> List[Dict]:
         """Accepted/rejected merges recorded by the fusion pass."""
@@ -89,6 +103,14 @@ class CompileRecord:
         if self.fallback_reason:
             out["<program>"] = self.fallback_reason
         return out
+
+    def latency_residuals(self) -> List[Dict[str, Any]]:
+        """Per-unit (predicted, measured) latency pairs of a profiled
+        compile — empty until the compiled program has dispatched."""
+        return [{"block": u,
+                 "predicted_s": self.predicted_latency_s.get(u),
+                 "measured_s": m}
+                for u, m in sorted(self.measured_latency_s.items())]
 
 
 class CompiledProgram:
@@ -184,7 +206,7 @@ class _Lowered:
 def _lower(opt: Program, backend: str, interpret: bool, jit: bool,
            hw: Optional[HardwareConfig] = None,
            quarantine: Optional[_cache.QuarantineStore] = None,
-           key: str = "") -> _Lowered:
+           key: str = "", profile: bool = False) -> _Lowered:
     """Lower the optimized program.  For the pallas backend, a *crash*
     during lowering (as opposed to a known-unsupported legality fallback)
     degrades to the jnp path and negative-caches the key in
@@ -215,9 +237,12 @@ def _lower(opt: Program, backend: str, interpret: bool, jit: bool,
                 faults.check("compile.stripe_jit", key=key, backend="pallas")
                 # per-block hybrid: each fusion group / boundary-piece unit
                 # lowers to Pallas or falls back to jnp independently
-                fn = lower_program_hybrid(
-                    opt, interpret=interpret,
-                    pipeline_depth=hw.pipeline_depth if hw is not None else 2)
+                with obs_trace.span("lower.pallas", interpret=interpret,
+                                    profile=profile):
+                    fn = lower_program_hybrid(
+                        opt, interpret=interpret,
+                        pipeline_depth=hw.pipeline_depth if hw is not None else 2,
+                        profile=profile)
             except UnsupportedPallas as e:
                 # legality fallback: deterministic and known, no quarantine
                 backend, fallback = "jnp", str(e)
@@ -242,14 +267,57 @@ def _lower(opt: Program, backend: str, interpret: bool, jit: bool,
                                      for k, v in fn.block_reasons.items())
                 blk_backends = dict(fn.block_backends)
                 blk_falls = dict(fn.block_reasons)
-    fn = lower_program_jnp(semantic, groups=groups)
-    n_kernels = fn.n_kernels
-    if jit:
-        import jax
+    with obs_trace.span("lower.jnp", profile=profile):
+        # profiled jnp lowering keeps per-group dispatch boundaries
+        # (no outer jit) so each unit can be wall-timed individually
+        fn = lower_program_jnp(semantic, groups=groups,
+                               jit_scope="group" if profile else None,
+                               profile=profile)
+        n_kernels = fn.n_kernels
+        if jit and not profile:
+            import jax
 
-        fn = jax.jit(fn)
+            fn = jax.jit(fn)
     return _Lowered(fn, backend, fallback, n_kernels, groups,
                     blk_backends, blk_falls, quarantined, quar_info)
+
+
+def _attach_profiling(low: _Lowered, record: CompileRecord,
+                      cache: _cache.CompilationCache, interpret: bool) -> Callable:
+    """Wrap a lowered callable so each dispatch folds the lowering's
+    per-unit wall times into ``record.measured_latency_s`` (best
+    observation wins; the dict is shared with cache-hit records of the
+    same artifact) and the first dispatch appends (predicted, measured)
+    rows to the residual JSONL under the cache dir."""
+    inner = low.fn
+    unit_times = getattr(inner, "unit_times", None)
+    state = {"logged": False}
+
+    def wrapper(arrays):
+        t0 = time.perf_counter()
+        out = inner(arrays)
+        if unit_times is not None:
+            record.measured_latency_s.update(unit_times)
+        else:
+            # whole-program dispatch (reference interpreter): one unit
+            try:
+                import jax
+
+                jax.block_until_ready(out)
+            except Exception:
+                pass
+            dt = time.perf_counter() - t0
+            prev = record.measured_latency_s.get("<program>")
+            if prev is None or dt < prev:
+                record.measured_latency_s["<program>"] = dt
+        if not state["logged"] and record.measured_latency_s:
+            state["logged"] = True
+            obs_profile.append_residuals(
+                obs_profile.residual_rows(record, interpret),
+                obs_profile.residual_log_path(cache))
+        return out
+
+    return wrapper
 
 
 # --------------------------------------------------------------------------
@@ -313,65 +381,88 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
                workers: Optional[int] = None,
                interpret: bool = True,
                jit: bool = True,
-               use_disk: bool = True) -> CompiledProgram:
+               use_disk: bool = True,
+               profile: bool = False) -> CompiledProgram:
     """Compile a tensor op end-to-end through the cached Stripe pipeline.
 
     ``workers`` enables the parallel autotune search on cold compiles;
     ``interpret`` selects Pallas interpret mode (CPU validation) for the
     pallas backend; ``cache`` defaults to the process-wide cache.
+    ``profile=True`` wall-times each lowered unit on dispatch: the record
+    carries per-unit measured latencies next to the cost model's
+    predictions, and the first dispatch appends (predicted, measured)
+    rows to ``residuals.jsonl`` under the cache dir (``profile`` is part
+    of the cache key — profiled and unprofiled artifacts differ).
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
     if cache is None:
         cache = _cache.get_default_cache()
-    t0 = time.perf_counter()
-    prog = _as_program(fn_or_contraction, tensors=tensors, out=out, ranges=ranges)
-    key = _cache.content_key(
-        "stripe_jit", DRIVER_VERSION, _cache.CACHE_VERSION,
-        ir_fingerprint(prog), hw.fingerprint(), backend, bool(interpret), bool(jit),
-    )
-    hit = cache.get_memory(key)
-    if isinstance(hit, CompiledProgram):
-        if hit.record.quarantined and not cache.quarantine.active(key):
-            # the cached artifact is a quarantine fallback and the backoff
-            # embargo has lapsed: drop through and re-attempt the real
-            # backend (success clears the entry, failure doubles backoff)
-            hit = None
-        else:
-            # fresh record per call: never mutate the cached one (the cold
-            # caller holds it), and report this call's lookup time
-            rec = dataclasses.replace(hit.record, cache_hit=True, disk_hit=False,
-                                      compile_time_s=time.perf_counter() - t0)
-            if rec.quarantined:
-                entry = cache.quarantine.get(key)
-                rec.quarantine = entry.as_dict() if entry is not None else dict(rec.quarantine)
-            return CompiledProgram(hit.program, hit._fn, hit.hw, rec)
+    with obs_trace.span("compile.stripe_jit", backend=backend, hw=hw.name,
+                        profile=profile) as csp:
+        t0 = time.perf_counter()
+        prog = _as_program(fn_or_contraction, tensors=tensors, out=out, ranges=ranges)
+        ir_fp = ir_fingerprint(prog)
+        hw_fp = hw.fingerprint()
+        key = _cache.content_key(
+            "stripe_jit", DRIVER_VERSION, _cache.CACHE_VERSION,
+            ir_fp, hw_fp, backend, bool(interpret), bool(jit), bool(profile),
+        )
+        with obs_trace.span("cache.probe", level="memory") as sp:
+            hit = cache.get_memory(key)
+            sp.set(hit=hit is not None)
+        if isinstance(hit, CompiledProgram):
+            if hit.record.quarantined and not cache.quarantine.active(key):
+                # the cached artifact is a quarantine fallback and the backoff
+                # embargo has lapsed: drop through and re-attempt the real
+                # backend (success clears the entry, failure doubles backoff)
+                hit = None
+            else:
+                # fresh record per call: never mutate the cached one (the cold
+                # caller holds it), and report this call's lookup time
+                rec = dataclasses.replace(hit.record, cache_hit=True, disk_hit=False,
+                                          compile_time_s=time.perf_counter() - t0)
+                if rec.quarantined:
+                    entry = cache.quarantine.get(key)
+                    rec.quarantine = entry.as_dict() if entry is not None else dict(rec.quarantine)
+                csp.set(cache="memory", backend_used=rec.backend)
+                return CompiledProgram(hit.program, hit._fn, hit.hw, rec)
 
-    payload = cache.get_disk(key) if use_disk else None
-    oracle = TilingOracle(known=(payload or {}).get("tilings"))
-    pm = PassManager(hw, oracle=oracle, autotune_workers=workers)
-    opt = pm.run(copy.deepcopy(prog))
-    low = _lower(opt, backend, interpret, jit, hw,
-                 quarantine=cache.quarantine, key=key)
-    record = CompileRecord(
-        key=key, backend=low.backend, hw_name=hw.name,
-        cache_hit=False, disk_hit=payload is not None,
-        compile_time_s=time.perf_counter() - t0,
-        tilings=dict(oracle.chosen), pass_trace=list(pm.trace),
-        fallback_reason=low.fallback, n_kernels=low.n_kernels,
-        groups=low.groups,
-        block_backends=low.block_backends, block_fallbacks=low.block_fallbacks,
-        quarantined=low.quarantined, quarantine=low.quarantine,
-    )
-    compiled = CompiledProgram(opt, low.fn, hw, record)
-    cache.put_memory(key, compiled)
-    if use_disk:
-        cache.put_disk(key, {
-            "tilings": oracle.chosen, "pass_trace": pm.trace,
-            "hw": hw.name, "backend": low.backend,
-            "compile_time_s": record.compile_time_s,
-            "n_kernels": low.n_kernels, "groups": low.groups,
-            "block_backends": low.block_backends,
-            "block_fallbacks": low.block_fallbacks,
-        })
-    return compiled
+        with obs_trace.span("cache.probe", level="disk") as sp:
+            payload = cache.get_disk(key) if use_disk else None
+            sp.set(hit=payload is not None)
+        oracle = TilingOracle(known=(payload or {}).get("tilings"))
+        pm = PassManager(hw, oracle=oracle, autotune_workers=workers)
+        opt = pm.run(copy.deepcopy(prog))
+        low = _lower(opt, backend, interpret, jit, hw,
+                     quarantine=cache.quarantine, key=key, profile=profile)
+        record = CompileRecord(
+            key=key, backend=low.backend, hw_name=hw.name,
+            cache_hit=False, disk_hit=payload is not None,
+            compile_time_s=time.perf_counter() - t0,
+            tilings=dict(oracle.chosen), pass_trace=list(pm.trace),
+            fallback_reason=low.fallback, n_kernels=low.n_kernels,
+            groups=low.groups,
+            block_backends=low.block_backends, block_fallbacks=low.block_fallbacks,
+            quarantined=low.quarantined, quarantine=low.quarantine,
+            profiled=bool(profile), ir_fingerprint=ir_fp, hw_fingerprint=hw_fp,
+        )
+        fn = low.fn
+        if profile:
+            record.predicted_latency_s = obs_profile.predicted_unit_latencies(
+                opt, record.pass_trace)
+            fn = _attach_profiling(low, record, cache, interpret)
+        compiled = CompiledProgram(opt, fn, hw, record)
+        cache.put_memory(key, compiled)
+        if use_disk:
+            cache.put_disk(key, {
+                "tilings": oracle.chosen, "pass_trace": pm.trace,
+                "hw": hw.name, "backend": low.backend,
+                "compile_time_s": record.compile_time_s,
+                "n_kernels": low.n_kernels, "groups": low.groups,
+                "block_backends": low.block_backends,
+                "block_fallbacks": low.block_fallbacks,
+            })
+        csp.set(cache="disk" if record.disk_hit else "miss",
+                backend_used=low.backend)
+        return compiled

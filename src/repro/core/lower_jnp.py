@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from functools import partial
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -489,7 +490,8 @@ def lower_group_jnp(prog: Program, names: Sequence[str],
 
 
 def lower_program_jnp(prog: Program, groups: Optional[List[List[str]]] = None,
-                      jit_scope: Optional[str] = None
+                      jit_scope: Optional[str] = None,
+                      profile: bool = False
                       ) -> Callable[[Mapping[str, jnp.ndarray]], Dict[str, jnp.ndarray]]:
     """Lower every op block; returns fn(inputs)->outputs dict.
 
@@ -501,6 +503,12 @@ def lower_program_jnp(prog: Program, groups: Optional[List[List[str]]] = None,
     units) — each unit is wrapped in its own ``jax.jit``, so the group is
     the dispatch granularity, mirroring the Pallas backend's
     one-kernel-per-group contract.
+
+    ``profile=True`` wall-times each group dispatch (synchronizing on its
+    updates), keeping the best observation per unit in ``run.unit_times``
+    keyed by the "+"-joined group member names; callers wanting
+    meaningful per-unit times should pair it with ``jit_scope="group"``
+    and no outer jit, so dispatch boundaries survive.
     """
     plans: Dict[str, Tuple[Block, FlatOp, Callable]] = {}
     order: List[str] = []
@@ -536,7 +544,9 @@ def lower_program_jnp(prog: Program, groups: Optional[List[List[str]]] = None,
         group_fn = _group_executor(prog, plans, g, frozenset(internal))
         if jit_scope in ("op", "group"):
             group_fn = jax.jit(group_fn)
-        group_fns.append((group_fn, frozenset(needed)))
+        group_fns.append(("+".join(g), group_fn, frozenset(needed)))
+
+    unit_times: Dict[str, float] = {}
 
     def run(inputs: Mapping[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
         # Buffers are materialized lazily: a fully-overwriting producer
@@ -544,8 +554,16 @@ def lower_program_jnp(prog: Program, groups: Optional[List[List[str]]] = None,
         # from zeros inside their group.
         arrays: Dict[str, jnp.ndarray] = {
             name: jnp.asarray(inputs[name]) for name in prog.inputs}
-        for gfn, needed in group_fns:
-            arrays.update(gfn({b: arrays[b] for b in needed if b in arrays}))
+        for gname, gfn, needed in group_fns:
+            if profile:
+                t0 = time.perf_counter()
+            updates = gfn({b: arrays[b] for b in needed if b in arrays})
+            arrays.update(updates)
+            if profile:
+                jax.block_until_ready(list(updates.values()))
+                dt = time.perf_counter() - t0
+                prev = unit_times.get(gname)
+                unit_times[gname] = dt if prev is None or dt < prev else prev
         for name, d in prog.buffers.items():
             if name not in arrays and name not in prog.inputs and name not in elided:
                 arrays[name] = jnp.zeros(d.shape, np.dtype(d.dtype))
@@ -553,4 +571,5 @@ def lower_program_jnp(prog: Program, groups: Optional[List[List[str]]] = None,
                 if n not in prog.inputs and n not in elided}
 
     run.n_kernels = len(group_fns)
+    run.unit_times = unit_times
     return run

@@ -49,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import time
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -1280,7 +1281,8 @@ def _place(env: Dict[str, jnp.ndarray], decl: TensorDecl, fn,
 
 def lower_program_hybrid(prog: Program, interpret: bool = False,
                          pipeline_depth: int = 2,
-                         strict: bool = False) -> Callable:
+                         strict: bool = False,
+                         profile: bool = False) -> Callable:
     """Lower every op block / fusion group to one Pallas kernel and
     compose the units in wavefront order; intermediates between groups
     live in outer memory (HBM).
@@ -1291,7 +1293,12 @@ def lower_program_hybrid(prog: Program, interpret: bool = False,
     callable (``block_backends`` / ``block_reasons``), and every other
     unit keeps its kernels.  ``strict=True`` restores the all-or-nothing
     contract (raise on the first unsupported block — the
-    ``lower_program_pallas`` entry point)."""
+    ``lower_program_pallas`` entry point).
+
+    ``profile=True`` wall-times every unit per dispatch (synchronizing on
+    the unit's outputs with ``jax.block_until_ready``), keeping the best
+    observation per unit in ``run.unit_times`` ({unit name: seconds}) —
+    the measured side of the cost-model residual log."""
     blocks = [s for s in prog.entry.stmts if isinstance(s, Block)]
     if not blocks:
         raise UnsupportedPallas("no op blocks")
@@ -1376,20 +1383,34 @@ def lower_program_hybrid(prog: Program, interpret: bool = False,
     outs = list(prog.outputs)
     buffers = prog.buffers
 
+    unit_times: Dict[str, float] = {}
+
     def run(arrays: Mapping[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
         env: Dict[str, jnp.ndarray] = {k: jnp.asarray(v) for k, v in arrays.items()}
         for u, kind, obj in steps:
+            if profile:
+                t0 = time.perf_counter()
             if kind == "pallas":
                 for fn in obj:
                     env[fn.out_buf] = _place(env, buffers[fn.out_buf], fn, fn(env))
+                if profile:
+                    jax.block_until_ready([env[fn.out_buf] for fn in obj])
             else:
-                env.update(obj(env))
+                updates = obj(env)
+                env.update(updates)
+                if profile:
+                    jax.block_until_ready(list(updates.values()))
+            if profile:
+                dt = time.perf_counter() - t0
+                prev = unit_times.get(u.name)
+                unit_times[u.name] = dt if prev is None or dt < prev else prev
         return {n: env[n] for n in outs}
 
     run.n_kernels = n_pallas + sum(1 for _, kind, _ in steps if kind == "jnp")
     run.n_pallas = n_pallas
     run.block_backends = backends
     run.block_reasons = reasons
+    run.unit_times = unit_times
     return run
 
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
+from ...obs import trace as obs_trace
 from ..hwconfig import HardwareConfig
 from ..ir import Program
 
@@ -95,7 +96,9 @@ class PassManager:
                     run_params["workers"] = self.autotune_workers
             report: List = []
             run_params["_report"] = report
-            prog = fn(prog, self.hw, run_params)
+            with obs_trace.span(f"pass.{name}", hw=self.hw.name) as sp:
+                prog = fn(prog, self.hw, run_params)
+                sp.set(report_entries=len(report))
             entry = (name, dict(params), report) if report else (name, dict(params))
             self.trace.append(entry)
         prog.source = source

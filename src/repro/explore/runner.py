@@ -28,6 +28,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from ..core import cache as _cache
 from ..core.cost import ProgramScore, score_pass_trace
+from ..obs import trace as obs_trace
 from ..core.driver import compile_cached, stripe_jit
 from ..core.hwconfig import HardwareConfig
 from .space import SearchSpace
@@ -66,13 +67,14 @@ def score_config(hw: HardwareConfig, workloads: Sequence[Workload],
     scores: Dict[str, ProgramScore] = {}
     t_compile = 0.0
     for w in workloads:
-        opt, rec = compile_cached(w.build(), hw, cache=cache, workers=workers)
-        t_compile += rec.compile_time_s
-        score = score_pass_trace(rec.pass_trace, n_kernels=rec.n_kernels)
-        # cross-check the trace-reported pressure against the scheduled
-        # arena tags on the optimized program itself
-        score.vmem_peak_bytes = max(score.vmem_peak_bytes, program_arena_peak(opt))
-        scores[w.name] = score
+        with obs_trace.span("explore.score", workload=w.name, hw=hw.name):
+            opt, rec = compile_cached(w.build(), hw, cache=cache, workers=workers)
+            t_compile += rec.compile_time_s
+            score = score_pass_trace(rec.pass_trace, n_kernels=rec.n_kernels)
+            # cross-check the trace-reported pressure against the scheduled
+            # arena tags on the optimized program itself
+            score.vmem_peak_bytes = max(score.vmem_peak_bytes, program_arena_peak(opt))
+            scores[w.name] = score
     return scores, t_compile
 
 
@@ -150,6 +152,18 @@ def run_sweep(space: SearchSpace, workload_spec: str = "default", *,
     points out over a process pool.  ``measure_top_k`` > 0 additionally
     runs the K best predicted points (plus the baseline) on the real
     ``measure_backend`` and records the measured ranking."""
+    with obs_trace.span("explore.sweep", strategy=strategy, budget=budget,
+                        workloads=workload_spec):
+        return _run_sweep(space, workload_spec, budget=budget,
+                          strategy=strategy, seed=seed, cache_dir=cache_dir,
+                          parallel=parallel, measure_top_k=measure_top_k,
+                          measure_backend=measure_backend)
+
+
+def _run_sweep(space: SearchSpace, workload_spec: str = "default", *,
+               budget: int = 32, strategy: str = "grid", seed: int = 0,
+               cache_dir: Optional[str] = None, parallel: int = 0,
+               measure_top_k: int = 0, measure_backend: str = "jnp") -> SweepResult:
     t_start = time.perf_counter()
     workloads = get_workloads(workload_spec)
     cache = _cache.CompilationCache(disk_dir=cache_dir, use_disk=cache_dir is not None)
@@ -319,14 +333,17 @@ def validate_top_k(sweep: SweepResult, k: int, backend: str = "jnp",
     for res in [sweep.baseline] + ranked:
         entry = {"index": res.index, "config": res.config_name,
                  "predicted_latency_s": res.latency_s, "error": ""}
-        try:
-            hw = sweep.space.base_config() if res.index < 0 else sweep.space.apply(res.point)
-            per_wl = _measure_config(hw, workloads, backend, cache)
-            entry["measured_us"] = per_wl
-            entry["measured_total_us"] = sum(per_wl.values())
-        except Exception as e:
-            entry["error"] = f"{type(e).__name__}: {e}"
-            entry["measured_total_us"] = None  # JSON-safe; ranked last
+        with obs_trace.span("explore.validate", config=res.config_name,
+                            backend=backend) as sp:
+            try:
+                hw = sweep.space.base_config() if res.index < 0 else sweep.space.apply(res.point)
+                per_wl = _measure_config(hw, workloads, backend, cache)
+                entry["measured_us"] = per_wl
+                entry["measured_total_us"] = sum(per_wl.values())
+            except Exception as e:
+                entry["error"] = f"{type(e).__name__}: {e}"
+                entry["measured_total_us"] = None  # JSON-safe; ranked last
+                sp.set(error=entry["error"])
         entries.append(entry)
     by_pred = sorted(entries, key=lambda e: e["predicted_latency_s"])
     by_meas = sorted(entries, key=lambda e: (e["measured_total_us"] is None,

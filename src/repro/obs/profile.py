@@ -1,0 +1,170 @@
+"""Kernel profiling support: cost-model residual logging.
+
+``stripe_jit(..., profile=True)`` wall-times every lowered unit (a
+fusion group's Pallas kernels, a jnp fallback group, or the whole
+program for the reference interpreter) on dispatch and attaches the
+measurements to the :class:`~repro.core.driver.CompileRecord` next to
+the cost model's predicted per-unit latencies.  On the first profiled
+dispatch the (predicted, measured) pairs are appended — one JSON object
+per line — to a **residual log** under the compilation-cache directory:
+
+    {"ir_fingerprint": ..., "hw_fingerprint": ..., "block": "a+b",
+     "predicted_s": 1.2e-5, "measured_s": 3.4e-5, "backend": "pallas",
+     "interpret": true, "hw": "tpu_v5e", "key": ..., "ts": ...}
+
+This file is the feed for the measured-feedback tuning database
+(ROADMAP item 2): rows are keyed by IR fingerprint x hardware
+fingerprint, exactly the identity the compilation cache already uses, so
+accumulated (predicted, measured) pairs can calibrate the roofline /
+pipeline model coefficients per hardware config.
+
+Helpers here are import-light (no jax, no core imports at module level)
+so ``repro.obs`` stays dependency-free.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+RESIDUAL_LOG_NAME = "residuals.jsonl"
+
+_write_lock = threading.Lock()
+
+
+def residual_log_path(cache=None) -> Path:
+    """Where profiled compiles append residual rows: the cache's disk
+    directory when it has one, else the process default cache dir."""
+    from ..core.cache import default_cache_dir
+
+    disk_dir = getattr(cache, "disk_dir", None)
+    base = Path(disk_dir) if disk_dir is not None else default_cache_dir()
+    return base / RESIDUAL_LOG_NAME
+
+
+def append_residuals(rows: List[Dict[str, Any]], path=None) -> Optional[Path]:
+    """Append rows to the residual JSONL (atomic at line granularity:
+    one ``write`` of the whole batch under a process-wide lock).  I/O
+    failures are swallowed — profiling must never fail the dispatch."""
+    if not rows:
+        return None
+    p = Path(path) if path is not None else residual_log_path()
+    data = "".join(json.dumps(r, sort_keys=True) + "\n" for r in rows)
+    try:
+        with _write_lock:
+            p.parent.mkdir(parents=True, exist_ok=True)
+            with open(p, "a") as f:
+                f.write(data)
+    except OSError:
+        return None
+    return p
+
+
+def read_residuals(path=None) -> List[Dict[str, Any]]:
+    """Load the residual log (skipping unparseable lines, e.g. a torn
+    final line after a crash)."""
+    p = Path(path) if path is not None else residual_log_path()
+    rows: List[Dict[str, Any]] = []
+    try:
+        with open(p) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rows.append(json.loads(line))
+                except ValueError:
+                    continue
+    except OSError:
+        return []
+    return rows
+
+
+def summarize_residuals(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Aggregate residual rows: count, per-backend counts, and the
+    geometric-mean ratio measured/predicted where both are present (the
+    cost model's systematic bias on this hardware)."""
+    import math
+
+    n = len(rows)
+    backends: Dict[str, int] = {}
+    log_ratios: List[float] = []
+    for r in rows:
+        backends[str(r.get("backend"))] = backends.get(str(r.get("backend")), 0) + 1
+        p, m = r.get("predicted_s"), r.get("measured_s")
+        if p and m and p > 0 and m > 0:
+            log_ratios.append(math.log(m / p))
+    gmean = math.exp(sum(log_ratios) / len(log_ratios)) if log_ratios else None
+    return {
+        "rows": n,
+        "by_backend": dict(sorted(backends.items())),
+        "pairs_with_prediction": len(log_ratios),
+        "measured_over_predicted_gmean": gmean,
+    }
+
+
+def predicted_unit_latencies(opt_program, pass_trace) -> Dict[str, float]:
+    """Per-lowering-unit predicted latency from the pass trace.
+
+    The autotile pass reports one analytic record per optimized block
+    (``latency_s`` = the pipelined roofline estimate).  Lowering units
+    are keyed by their "+"-joined *semantic* member names (the hybrid
+    composer's unit naming), so each autotile record is attributed to
+    the unit whose member set covers the record's block; records that
+    match no unit (e.g. blocks the later passes restructure) keep their
+    own block name."""
+    from ..core.ir import Block
+    from ..core.passes.fuse import members_of
+
+    units: List[tuple] = []  # (unit_name, member set)
+    seen = set()
+    for s in opt_program.entry.stmts:
+        if not isinstance(s, Block):
+            continue
+        members = members_of(s)
+        key = tuple(members)
+        if key not in seen:
+            seen.add(key)
+            units.append(("+".join(members), set(members)))
+
+    entries: List[Dict[str, Any]] = []
+    for entry in pass_trace:
+        if entry and entry[0] == "autotile" and len(entry) > 2:
+            entries = [e for e in entry[2] if isinstance(e, dict) and "block" in e]
+            break
+
+    predicted: Dict[str, float] = {}
+    for e in entries:
+        lat = float(e.get("latency_s", 0.0) or 0.0)
+        bases = {p.split(".")[0] for p in str(e["block"]).split("+")}
+        for uname, members in units:
+            if bases & members:
+                predicted[uname] = predicted.get(uname, 0.0) + lat
+                break
+        else:
+            predicted[str(e["block"])] = predicted.get(str(e["block"]), 0.0) + lat
+    return predicted
+
+
+def residual_rows(record, interpret: bool) -> List[Dict[str, Any]]:
+    """Build residual-log rows from a profiled CompileRecord's
+    (predicted, measured) per-unit latencies."""
+    rows = []
+    for unit, measured in sorted(record.measured_latency_s.items()):
+        rows.append({
+            "ir_fingerprint": record.ir_fingerprint,
+            "hw_fingerprint": record.hw_fingerprint,
+            "hw": record.hw_name,
+            "key": record.key,
+            "block": unit,
+            "backend": record.block_backends.get(unit, record.backend),
+            "interpret": bool(interpret),
+            "predicted_s": record.predicted_latency_s.get(unit),
+            "measured_s": measured,
+            "ts": time.time(),
+            "pid": os.getpid(),
+        })
+    return rows

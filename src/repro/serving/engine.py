@@ -89,6 +89,8 @@ import numpy as np
 from ..core import cache as stripe_cache
 from ..core.driver import CompileRecord
 from ..core.hwconfig import get_config as _get_hw
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..reliability import faults
 from .paged import PagePool, init_pages, make_decode_step, make_prefill_step, pages_needed
 from .request import EngineConfig, Request, SamplingParams
@@ -157,7 +159,7 @@ class ServingEngine:
             hw=_get_hw(config.hw), backend=config.backend,
             interpret=config.interpret,
             use_disk=self._compile_cache.disk_dir is not None,
-            cache=self._compile_cache)
+            cache=self._compile_cache, profile=config.profile)
 
         # ---- paged KV state (static shapes; see paged.py for the layout)
         self._ps = config.page_size
@@ -205,11 +207,23 @@ class ServingEngine:
         # incarnation, and how many of them are replays of pre-failure output
         self._slot_emitted = np.zeros(self.slots, np.int64)
         self._slot_replay = np.zeros(self.slots, np.int64)
-        self._disk_errors_seen = self._compile_cache.stats.disk_errors
+        # hot-path read: _surface_cache_errors runs every serve iteration,
+        # so hold the registry counter itself rather than going through the
+        # CacheStats attribute shim (and never copy a stats dict per step)
+        self._disk_err_ctr = self._compile_cache.stats.registry.counter(
+            "cache.disk_errors")
+        self._disk_errors_seen = int(self._disk_err_ctr.value)
 
-        # ---- bookkeeping
+        # ---- bookkeeping + observability
+        # the event log is a bounded ring buffer: long-running traffic
+        # cannot grow it without bound; drops are counted and surfaced as
+        # the serve.dropped_events metric
         self._next_uid = 0
-        self._events: List[Dict[str, Any]] = []
+        self._event_cap = config.event_log_size or None
+        self._events: Deque[Dict[str, Any]] = deque(maxlen=self._event_cap)
+        self._dropped_events = 0
+        self._obs = obs_metrics.Registry()
+        self._m_events = {}  # per-event-label counter cache (hot-path refs)
         self._finished: List[Request] = []
         self._shed_reqs: List[Request] = []
         self._steps = 0
@@ -218,6 +232,34 @@ class ServingEngine:
         self._retries_total = 0
         self._warmed = False
         self._decode_warm = False
+        self._h_decode = self._obs.histogram("serve.decode_step_s")
+        self._h_prefill = self._obs.histogram("serve.prefill_s")
+        self._h_queue = self._obs.histogram("serve.queue_wait_s")
+        self._h_request = self._obs.histogram("serve.request_s")
+
+    # -------------------------------------------------------------- events
+    def _event(self, event: str, **fields) -> None:
+        """Append one structured event to the bounded log, count it in the
+        metrics registry, and (when tracing) mark it on the trace."""
+        if self._event_cap is not None and len(self._events) == self._event_cap:
+            self._dropped_events += 1
+        self._events.append({"step": self._steps, "event": event, **fields})
+        ctr = self._m_events.get(event)
+        if ctr is None:
+            ctr = self._m_events[event] = self._obs.counter(
+                "serve.events", event=event)
+        ctr.inc()
+        obs_trace.instant(f"serve.{event}", **fields)
+
+    def _finish_obs(self, r: Request) -> None:
+        """Request-lifecycle observability at terminal time: total-latency
+        histogram plus a retroactive ``serve.request`` span covering the
+        request's whole life (submit -> terminal)."""
+        if r.submit_time and r.finish_time:
+            self._h_request.observe(r.finish_time - r.submit_time)
+            obs_trace.span_at("serve.request", r.submit_time, r.finish_time,
+                              uid=r.uid, status=r.status,
+                              tokens=len(r.out_tokens))
 
     # ------------------------------------------------------------- compile
     def _build_decode(self) -> None:
@@ -273,9 +315,8 @@ class ServingEngine:
             return self._prefill_fallback(bucket, params)
         if entry is not None and was_expired is False:
             # embargo just lapsed: one retry is permitted below
-            self._events.append({
-                "step": self._steps, "event": "quarantine_expired",
-                "bucket": bucket, "fail_count": entry.fail_count})
+            self._event("quarantine_expired", bucket=bucket,
+                        fail_count=entry.fail_count)
         fn = self._compile_cache.get_memory(key)
         if fn is not None:
             return fn
@@ -294,10 +335,9 @@ class ServingEngine:
             jax.block_until_ready(out)
         except Exception as e:  # noqa: BLE001 — any compile crash quarantines
             qe = self._quarantine.record_failure(key, repr(e))
-            self._events.append({
-                "step": self._steps, "event": "quarantine", "bucket": bucket,
-                "reason": repr(e)[:200], "fail_count": qe.fail_count,
-                "backoff_s": round(qe.backoff_s, 4)})
+            self._event("quarantine", bucket=bucket, reason=repr(e)[:200],
+                        fail_count=qe.fail_count,
+                        backoff_s=round(qe.backoff_s, 4))
             return self._prefill_fallback(bucket, params)
         if progs is not None:
             self._records.update(
@@ -305,8 +345,7 @@ class ServingEngine:
         if entry is not None:
             # post-embargo retry succeeded: the bucket is healthy again
             self._quarantine.clear(key)
-            self._events.append({"step": self._steps, "event": "quarantine_clear",
-                                 "bucket": bucket})
+            self._event("quarantine_clear", bucket=bucket)
         self._compile_cache.put_memory(key, fn)
         self._compile_log.append({
             "kind": "prefill", "bucket": bucket, "slots": 1, "plen": bucket,
@@ -360,8 +399,7 @@ class ServingEngine:
         for b in buckets:
             if b <= self.max_len:
                 self._get_prefill(b, params, warm=True)
-        self._events.append({"step": self._steps, "event": "warm_start",
-                             "buckets": buckets})
+        self._event("warm_start", buckets=buckets)
 
     # ----------------------------------------------------------- admission
     def submit(self, req: Request) -> bool:
@@ -393,14 +431,13 @@ class ServingEngine:
                 req.done = True
                 req.finish_time = req.submit_time
                 self._shed_reqs.append(req)
-                self._events.append({"step": self._steps, "event": "shed",
-                                     "uid": req.uid, "queue_depth": depth})
+                self._event("shed", uid=req.uid, queue_depth=depth)
                 return False
         self._next_uid = max(self._next_uid, req.uid + 1)
         self._ensure_prep_thread()
         with self._cond:
             self._n_submitted += 1
-        self._events.append({"step": self._steps, "event": "enqueue", "uid": req.uid})
+        self._event("enqueue", uid=req.uid)
         self._raw.put(req)
         return True
 
@@ -419,7 +456,8 @@ class ServingEngine:
                     return
                 try:
                     faults.check("serve.prep", uid=item.uid)
-                    prep = self._prepare(item)
+                    with obs_trace.span("serve.prep", uid=item.uid):
+                        prep = self._prepare(item)
                 except Exception as e:  # noqa: BLE001 — per-item failure:
                     # the request fails, the worker survives
                     with self._cond:
@@ -450,8 +488,7 @@ class ServingEngine:
         req.done = True
         req.finish_time = time.perf_counter()
         self._finished.append(req)
-        self._events.append({"step": self._steps, "event": "prep_failed",
-                             "uid": req.uid, "error": req.error})
+        self._event("prep_failed", uid=req.uid, error=req.error)
 
     def _prepare(self, req: Request) -> _Prepared:
         plen = int(req.prompt.size)
@@ -483,8 +520,7 @@ class ServingEngine:
                     item, exc = self._prep_exc
                     self._prep_exc = None
                     self._prep_restarts += 1
-                    ev = {"step": self._steps, "event": "prep_thread_restart",
-                          "restarts": self._prep_restarts,
+                    ev = {"restarts": self._prep_restarts,
                           "error": repr(exc)[:200]}
                     if item is not None:
                         item.retries += 1
@@ -498,7 +534,7 @@ class ServingEngine:
                             # through the restarted worker
                             self._raw.put(item)
                             ev["requeued_uid"] = item.uid
-                    self._events.append(ev)
+                    self._event("prep_thread_restart", **ev)
                     self._prep_thread = None
                     self._ensure_prep_thread()
                     continue
@@ -567,23 +603,22 @@ class ServingEngine:
         r.done = True
         r.finish_time = time.perf_counter()
         self._finished.append(r)
-        ev = {"step": self._steps, "event": status, "uid": r.uid,
-              "tokens": len(r.out_tokens)}
+        self._finish_obs(r)
+        ev = {"uid": r.uid, "tokens": len(r.out_tokens)}
         if where:
             ev["where"] = where
         if error:
             ev["error"] = error[:200]
-        self._events.append(ev)
+        self._event(status, **ev)
 
     def _surface_cache_errors(self) -> None:
         """Turn disk-cache corruption the CompilationCache absorbed (torn
         or unreadable entries treated as misses) into engine events so
         every injected cache fault has a visible recovery record."""
-        errs = self._compile_cache.stats.disk_errors
+        errs = int(self._disk_err_ctr.value)
         if errs > self._disk_errors_seen:
-            self._events.append({
-                "step": self._steps, "event": "cache_corruption_recovered",
-                "count": errs - self._disk_errors_seen})
+            self._event("cache_corruption_recovered",
+                        count=errs - self._disk_errors_seen)
             self._disk_errors_seen = errs
 
     def _admit(self, params) -> List[Tuple[int, int]]:
@@ -608,25 +643,34 @@ class ServingEngine:
                 # back to the queue head and retries next admission phase
                 with self._cond:
                     self._ready.appendleft(prep)
-                self._events.append({
-                    "step": self._steps, "event": "alloc_failed",
-                    "uid": prep.req.uid, "pages": prep.n_pages,
-                    "free_pages": self._pool.free_pages})
+                self._event("alloc_failed", uid=prep.req.uid,
+                            pages=prep.n_pages,
+                            free_pages=self._pool.free_pages)
                 break
             slot = self._free_slots.pop(0)
             r = prep.req
             r.slot = slot
+            # queue wait closes at admission: stamped retroactively from
+            # the submit-side timestamp (submit and admission run on
+            # different threads, so this cannot be a ``with`` block)
+            now = time.perf_counter()
+            self._h_queue.observe(now - r.submit_time)
+            obs_trace.span_at("serve.queue", r.submit_time, now, uid=r.uid)
             row = np.full(self._pps, self._garbage[slot], np.int32)
             row[: len(pages)] = pages
             self._page_table[slot] = row
             self._slot_pages[slot] = pages
             self._slot_req[slot] = r
             self._slot_eff[slot] = prep.eff_new
-            fn = self._get_prefill(prep.bucket, params)
-            tok, self._pk, self._pv = fn(
-                params, jnp.asarray(prep.tokens), jnp.int32(prep.plen),
-                jnp.asarray(row), self._pk, self._pv)
-            first = int(tok)
+            with obs_trace.span("serve.prefill", uid=r.uid,
+                                bucket=prep.bucket, slot=slot):
+                t_pf = time.perf_counter()
+                fn = self._get_prefill(prep.bucket, params)
+                tok, self._pk, self._pv = fn(
+                    params, jnp.asarray(prep.tokens), jnp.int32(prep.plen),
+                    jnp.asarray(row), self._pk, self._pv)
+                first = int(tok)
+            self._h_prefill.observe(time.perf_counter() - t_pf)
             self._pos[slot] = prep.plen
             self._last[slot] = first
             replay = r.replay_len
@@ -640,20 +684,17 @@ class ServingEngine:
                         f"{r.out_tokens[0]}")
                 self._slot_emitted[slot] = 1
                 self._slot_replay[slot] = replay
-                self._events.append({
-                    "step": self._steps, "event": "admit", "uid": r.uid,
-                    "slot": slot, "bucket": prep.bucket, "retry": r.retries,
-                    "replay": replay, "queue_depth": len(self._ready)})
+                self._event("admit", uid=r.uid, slot=slot, bucket=prep.bucket,
+                            retry=r.retries, replay=replay,
+                            queue_depth=len(self._ready))
             else:
                 r.first_token_time = time.perf_counter()
                 r.out_tokens.append(first)
                 self._tokens_out += 1
                 self._slot_emitted[slot] = 1
                 self._slot_replay[slot] = 0
-                self._events.append({
-                    "step": self._steps, "event": "admit", "uid": r.uid,
-                    "slot": slot, "bucket": prep.bucket,
-                    "queue_depth": len(self._ready)})
+                self._event("admit", uid=r.uid, slot=slot, bucket=prep.bucket,
+                            queue_depth=len(self._ready))
                 emitted.append((r.uid, first))
                 if first == r.sampling.eos_id or len(r.out_tokens) >= prep.eff_new:
                     self._evict(slot)
@@ -680,9 +721,10 @@ class ServingEngine:
         r.finish_time = time.perf_counter()
         self._release_slot(slot)
         self._finished.append(r)
-        self._events.append({
-            "step": self._steps, "event": "finish", "uid": r.uid, "slot": slot,
-            "queue_depth": len(self._ready), "free_pages": self._pool.free_pages})
+        self._finish_obs(r)
+        self._event("finish", uid=r.uid, slot=slot,
+                    queue_depth=len(self._ready),
+                    free_pages=self._pool.free_pages)
 
     def _on_step_failure(self, live: List[int], exc: BaseException) -> None:
         """Crash-safe decode recovery: release only the affected slots and
@@ -695,9 +737,8 @@ class ServingEngine:
         affected = payload.get("slots")
         affected = [s for s in (live if affected is None else affected)
                     if 0 <= s < self.slots and self._slot_req[s] is not None]
-        self._events.append({
-            "step": self._steps, "event": "device_step_failed",
-            "slots": list(affected), "error": repr(exc)[:200]})
+        self._event("device_step_failed", slots=list(affected),
+                    error=repr(exc)[:200])
         for s in affected:
             r = self._slot_req[s]
             self._release_slot(s)
@@ -707,18 +748,15 @@ class ServingEngine:
                 self._finish_terminal(
                     r, "failed",
                     error=f"retries exhausted after device-step failure: {exc!r}")
-                self._events.append({
-                    "step": self._steps, "event": "retry_exhausted",
-                    "uid": r.uid, "retries": r.retries})
+                self._event("retry_exhausted", uid=r.uid, retries=r.retries)
                 continue
             r.replay_len = len(r.out_tokens)
             r.slot = -1
             prep = self._prepare(r)
             with self._cond:
                 self._ready.appendleft(prep)
-            self._events.append({
-                "step": self._steps, "event": "requeue", "uid": r.uid,
-                "retries": r.retries, "replay": r.replay_len})
+            self._event("requeue", uid=r.uid, retries=r.retries,
+                        replay=r.replay_len)
 
     # ----------------------------------------------------------- the loop
     def _serve(self, params, max_steps: int) -> Iterator[Tuple[int, int]]:
@@ -757,17 +795,20 @@ class ServingEngine:
             try:
                 faults.check("serve.decode_step",
                              step=self._steps, n_live=len(live))
-                nxt, pk, pv = self._decode_fn(
-                    params, self._pk, self._pv,
-                    jnp.asarray(self._page_table), jnp.asarray(self._pos),
-                    jnp.asarray(self._last))
-                nxt = np.asarray(nxt)
+                with obs_trace.span("serve.decode_step", step=self._steps,
+                                    n_live=len(live)):
+                    nxt, pk, pv = self._decode_fn(
+                        params, self._pk, self._pv,
+                        jnp.asarray(self._page_table), jnp.asarray(self._pos),
+                        jnp.asarray(self._last))
+                    nxt = np.asarray(nxt)
             except Exception as e:  # noqa: BLE001 — device-step crash:
                 # nothing was committed (pages/pos/output update below, only
                 # on success); recover the affected slots and carry on
                 self._on_step_failure(live, e)
                 continue
             self._pk, self._pv = pk, pv
+            self._h_decode.observe(time.perf_counter() - t0)
             steps += 1
             self._steps += 1
             self._live_steps += len(live)
@@ -858,6 +899,9 @@ class ServingEngine:
         return {k: e.as_dict() for k, e in self._quarantine.entries().items()}
 
     def metrics(self) -> Dict[str, Any]:
+        """Engine health summary (legacy dict shape, plus
+        ``dropped_events`` — events lost to the bounded ring buffer)."""
+        self._sync_registry()
         steps = max(self._steps, 1)
         by_status: Dict[str, int] = {}
         for r in self._finished:
@@ -875,4 +919,39 @@ class ServingEngine:
             "slot_utilization": self._live_steps / (steps * self.slots),
             "free_pages": self._pool.free_pages,
             "queue_depth": len(self._ready),
+            "dropped_events": self._dropped_events,
         }
+
+    def _sync_registry(self) -> None:
+        """Fold the plain-int hot-path counters into the obs registry so a
+        snapshot reflects current state.  Hot paths deliberately bump bare
+        ints; this reconciles them lazily at observation time."""
+        reg = self._obs
+        steps = max(self._steps, 1)
+        reg.counter("serve.decode_steps").set(self._steps)
+        reg.counter("serve.tokens_out").set(self._tokens_out)
+        reg.counter("serve.retries").set(self._retries_total)
+        reg.counter("serve.prep_restarts").set(self._prep_restarts)
+        reg.counter("serve.shed").set(len(self._shed_reqs))
+        by_status: Dict[str, int] = {}
+        for r in self._finished:
+            by_status[r.status] = by_status.get(r.status, 0) + 1
+        for status, n in by_status.items():
+            reg.counter("serve.finished", status=status).set(n)
+        reg.gauge("serve.slot_utilization").set(
+            self._live_steps / (steps * self.slots))
+        reg.gauge("serve.free_pages").set(self._pool.free_pages)
+        reg.gauge("serve.queue_depth").set(len(self._ready))
+        reg.gauge("serve.dropped_events").set(self._dropped_events)
+
+    def metrics_registry(self) -> obs_metrics.Registry:
+        """The engine's private metrics registry (counters per event type,
+        latency histograms ``serve.{queue_wait,prefill,decode_step,request}_s``)."""
+        self._sync_registry()
+        return self._obs
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Deterministic snapshot of the engine registry: event counters,
+        gauges, and the four latency histograms."""
+        self._sync_registry()
+        return self._obs.snapshot()

@@ -84,6 +84,13 @@ class EngineConfig:
       failure is requeued before it is failed (``retry_exhausted``).
     * ``quarantine_backoff_s`` — base backoff of the compile-failure
       quarantine (doubles per consecutive failure).
+    * ``event_log_size`` — ring-buffer capacity of the engine event log;
+      beyond it the oldest events drop (counted in the
+      ``serve.dropped_events`` metric).  ``0`` keeps the log unbounded.
+    * ``profile`` — compile the decode-time Stripe programs with
+      ``stripe_jit(..., profile=True)``: per-unit measured latencies
+      attach to each ``CompileRecord`` and (predicted, measured) rows
+      land in the cost-model residual log.
     """
 
     slots: int = 8
@@ -100,6 +107,8 @@ class EngineConfig:
     default_ttl_s: Optional[float] = None
     max_retries: int = 2
     quarantine_backoff_s: float = 0.25
+    event_log_size: int = 10_000
+    profile: bool = False
 
     def validate(self) -> None:
         if self.slots < 1:
@@ -124,6 +133,9 @@ class EngineConfig:
         if self.quarantine_backoff_s <= 0:
             raise ValueError(
                 f"quarantine_backoff_s must be > 0, got {self.quarantine_backoff_s}")
+        if self.event_log_size < 0:
+            raise ValueError(
+                f"event_log_size must be >= 0, got {self.event_log_size}")
 
     @property
     def pages_per_slot(self) -> int:

@@ -51,7 +51,7 @@ _FUSABLE_ACT = {
 
 def _jit_opts(cfg: "EngineLikeConfig") -> Dict:
     return dict(backend=cfg.backend, interpret=cfg.interpret,
-                use_disk=cfg.use_disk, cache=cfg.cache)
+                use_disk=cfg.use_disk, cache=cfg.cache, profile=cfg.profile)
 
 
 @dataclasses.dataclass
@@ -63,6 +63,7 @@ class EngineLikeConfig:
     interpret: bool = True
     use_disk: bool = True
     cache: Optional[_cache.CompilationCache] = None
+    profile: bool = False
 
 
 @dataclasses.dataclass
