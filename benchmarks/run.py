@@ -754,6 +754,161 @@ def bench_chaos() -> None:
     emit("chaos_throughput_ratio", 0.0, results["faulted_throughput_ratio"])
 
 
+def bench_autotune() -> None:
+    """Measured-feedback autotuning (tune/ + measure-mode explore).
+
+    Three legs over one temp cache+DB directory:
+
+    * **measure** — a cold sweep with ``measure=3`` wall-times candidate
+      tilings per default-corpus workload (pallas-interpret; tile sizes
+      change the interpreted grid, so the signal is real) and records
+      every measurement into the tuning DB.  The measured winner must be
+      no worse than the analytic choice everywhere (the analytic tiling
+      is always candidate 0, so the min over candidates can't lose) and
+      strictly better somewhere.
+    * **replay** — a fresh cache instance over the same directory (= a
+      new process) compiles each workload with ``tune=db``: every record
+      must carry ``decision_source == "tuned"``, the DB must not grow
+      (replay never re-measures), and the tuned fig4 conv must stay
+      bit-exact vs the reference interpreter.
+    * **calibrate** — profiled jnp compiles append (predicted, measured)
+      residual rows; a per-term calibration is fit from them, activated,
+      persisted next to the DB, and a second profiled pass must shrink
+      the |log gmean(measured/predicted)| bias.
+
+    Artifacts ``tuning_db.json`` and ``calibration_report.json`` are
+    copied into the CWD for CI upload.
+    """
+    import math
+    import shutil
+    import tempfile
+
+    from repro.tune import clear_calibrations, save_calibrations
+
+    rng = np.random.RandomState(0)
+    space = api.get_space("tpu-sweep")
+    hw = space.base_config()
+    workloads = api.get_workloads("default")
+
+    def rand_inputs(prog):
+        ins = {}
+        for nm in prog.inputs:
+            d = prog.buffers[nm]
+            ins[nm] = (rng.randint(-4, 5, d.shape).astype(np.int8)
+                       if d.dtype == "int8"
+                       else rng.randn(*d.shape).astype(np.float32))
+        return ins
+
+    with tempfile.TemporaryDirectory() as d:
+        db = api.TuningDB(dir=d)
+
+        # ---- leg 1: cold sweep + measure populates the DB -----------------
+        t0 = time.perf_counter()
+        sweep = api.run_sweep(space, "default", budget=4, strategy="grid",
+                              cache_dir=d, measure=3, tune_db=db)
+        dt_measure = (time.perf_counter() - t0) * 1e6
+        ms = sweep.measurement
+        assert ms is not None
+        assert len(db) == len(workloads), (len(db), ms["workloads"])
+        no_worse = better = 0
+        for name, wl in sorted(ms["workloads"].items()):
+            assert not wl.get("error"), f"{name}: {wl['error']}"
+            speed = wl.get("speedup_vs_analytic") or 1.0
+            if wl["best_s"] <= wl["analytic_s"] * 1.05:
+                no_worse += 1
+            if wl["improved"]:
+                better += 1
+            emit(f"autotune_measured/{name}", wl["best_s"] * 1e6,
+                 f"\"{speed:.2f}x vs analytic "
+                 f"({wl['n_candidates']} cands, {wl['n_rejected']} rejected)\"")
+        assert no_worse >= 3 and better >= 1, (no_worse, better)
+        emit("autotune_measure_sweep", dt_measure,
+             f"\"db={len(db)} no_worse={no_worse}/{len(workloads)} "
+             f"better={better}\"")
+
+        # ---- leg 2: tuned replay from a fresh cache (= new process) -------
+        n_before = len(db)
+        cache2 = api.CompilationCache(disk_dir=d)
+        t0 = time.perf_counter()
+        tuned_recs = {}
+        for w in workloads:
+            c = api.stripe_jit(w.build(), hw, backend="pallas",
+                               interpret=True, cache=cache2, tune=db)
+            tuned_recs[w.name] = c
+        dt_replay = (time.perf_counter() - t0) * 1e6 / len(workloads)
+        n_tuned = sum(1 for c in tuned_recs.values()
+                      if c.record.decision_source == "tuned")
+        assert n_tuned == len(workloads), {
+            n: c.record.decision_source for n, c in tuned_recs.items()}
+        assert cache2.stats.tuned_hits == len(workloads)
+        assert len(db) == n_before, "tuned replay must not re-measure"
+        best = {n: wl["best_candidate"] for n, wl in ms["workloads"].items()}
+        assert all(c.record.tuned["candidate_id"] == best[n]
+                   for n, c in tuned_recs.items())
+        # the replayed winner stays correct: int8 fig4 conv is bit-exact
+        fig4 = next(w for w in workloads if w.name == "fig4_conv")
+        src = fig4.build()
+        ins = rand_inputs(src)
+        got = np.asarray(tuned_recs["fig4_conv"](ins)["O"])
+        assert (got == api.execute_reference(src, ins)["O"]).all()
+        emit("autotune_tuned_replay_compile", dt_replay,
+             f"\"{n_tuned}/{len(workloads)} tuned "
+             f"(hits={cache2.stats.tuned_hits})\"")
+
+        # DB round-trip: a fresh handle sees identical entries
+        db2 = api.TuningDB(dir=d)
+        assert len(db2) == n_before
+        for w in workloads:
+            rec = tuned_recs[w.name].record
+            e = db2.lookup(rec.ir_fingerprint, rec.hw_fingerprint,
+                           "pallas", True)
+            assert e is not None and e.candidate_id == best[w.name]
+        emit("autotune_db_roundtrip", 0.0, n_before)
+        shutil.copyfile(db.path, "tuning_db.json")
+
+        # ---- leg 3: online cost-model calibration -------------------------
+        clear_calibrations()
+        try:
+            cache3 = api.CompilationCache(disk_dir=d)
+            for _pass in range(2):
+                for w in workloads:
+                    prog = w.build()
+                    c = api.stripe_jit(prog, hw, backend="jnp",
+                                       profile=True, cache=cache3)
+                    c(rand_inputs(prog))
+                if _pass == 0:
+                    rows = obs.read_residuals(obs.residual_log_path(cache3))
+                    fit = api.fit_calibration(rows, hw.fingerprint(), "jnp")
+                    assert fit is not None, "calibration fit needs term rows"
+                    api.set_calibration(fit)
+                    save_calibrations(d, cals=[fit])  # persist next to the DB
+            rows = obs.read_residuals(obs.residual_log_path(cache3))
+
+            def gmean(rs):
+                logs = [math.log(r["measured_s"] / r["predicted_s"])
+                        for r in rs if r.get("predicted_s")
+                        and r.get("measured_s")]
+                return math.exp(sum(logs) / len(logs)) if logs else None
+
+            g_before = gmean([r for r in rows if not r.get("calibrated")])
+            g_after = gmean([r for r in rows if r.get("calibrated")])
+            assert g_before is not None and g_after is not None
+            bias_b, bias_a = abs(math.log(g_before)), abs(math.log(g_after))
+            assert bias_a <= bias_b, (g_before, g_after)
+            with open("calibration_report.json", "w") as f:
+                json.dump({"hw": hw.name, "backend": "jnp",
+                           "rows": len(rows),
+                           "gmean_before": g_before, "gmean_after": g_after,
+                           "bias_before": bias_b, "bias_after": bias_a,
+                           "calibration": fit.to_json()}, f, indent=2)
+            emit("autotune_calibration_gmean_before", 0.0, f"{g_before:.3f}")
+            emit("autotune_calibration_gmean_after", 0.0, f"{g_after:.3f}")
+            emit("autotune_calibration_bias_shrink", 0.0,
+                 f"{bias_b / max(bias_a, 1e-9):.1f}x")
+        finally:
+            clear_calibrations()
+
+
 BENCHES = {
     "fig1": bench_fig1_engineering_effort,
     "fig4": bench_fig4_autotile,
@@ -763,6 +918,7 @@ BENCHES = {
     "memplan": bench_memplan,
     "conv": bench_conv,
     "explore": bench_explore,
+    "autotune": bench_autotune,
     "serving": bench_serving,
     "chaos": bench_chaos,
     "matmul": bench_stripe_matmul,

@@ -39,10 +39,13 @@ Observability:
     ``obs`` (subpackage: ``obs.span``, ``obs.enable_tracing``,
     ``obs.export_chrome_trace``, ``obs.metrics_snapshot``,
     ``obs.read_residuals``, …)
+Autotuning:
+    ``tune`` (subpackage), ``TuningDB``, ``compile_with_tilings``,
+    ``fit_calibration``, ``set_calibration``, ``measure_interleaved``
 """
 from __future__ import annotations
 
-from . import configs, explore, obs
+from . import configs, explore, obs, tune
 from .core import (
     CompilationCache,
     CompiledProgram,
@@ -56,6 +59,7 @@ from .core import (
     stripe_jit,
     validate_program,
 )
+from .core.driver import compile_with_tilings
 from .core.cost import evaluate_tiling, score_pass_trace
 from .core.hwconfig import REGISTRY as HW_REGISTRY
 from .core.hwconfig import HardwareConfig, get_config
@@ -73,6 +77,12 @@ from .optim import adamw
 from .reliability import FaultPlan, InjectedFault, faults
 from .serving import EngineConfig, Request, SamplingParams, ServingEngine, WaveEngine
 from .train.loop import TrainConfig, Trainer
+from .tune import (
+    TuningDB,
+    fit_calibration,
+    measure_interleaved,
+    set_calibration,
+)
 
 # The two headline verbs, under their public names.
 jit = stripe_jit
@@ -101,4 +111,7 @@ __all__ = [
     "faults", "FaultPlan", "InjectedFault",
     # observability
     "obs",
+    # autotuning
+    "tune", "TuningDB", "compile_with_tilings", "fit_calibration",
+    "set_calibration", "measure_interleaved",
 ]

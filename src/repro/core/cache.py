@@ -40,7 +40,11 @@ from ..reliability import faults
 # v4: the roofline model charges halo materialization/refetch traffic
 # (TileCost.halo_bytes), so tilings chosen for halo-windowed blocks
 # under v3 can differ; payloads also carry per-unit hybrid backends.
-CACHE_VERSION = 4
+# v5: measured-feedback autotuning — compile keys additionally fold in
+# the tuned-entry candidate id and the active cost-model calibration
+# fingerprint (tuned/calibrated artifacts must never collide with
+# analytic ones), and payloads record the decision source.
+CACHE_VERSION = 5
 
 ENV_CACHE_DIR = "STRIPE_CACHE_DIR"
 ENV_CACHE_DISABLE = "STRIPE_CACHE_DISABLE"
@@ -95,6 +99,10 @@ class CacheStats:
         # (retry allowed again), and successful recoveries
         "quarantined", "quarantine_hits", "quarantine_expiries",
         "quarantine_clears",
+        # measured-feedback tuning DB consultations by the driver: a hit
+        # replays a measured-best tiling (decision source "tuned"), a
+        # miss falls through to the analytic autotile search
+        "tuned_hits", "tuned_misses",
     )
 
     def __init__(self, registry: Optional["obs_metrics.Registry"] = None, **initial):

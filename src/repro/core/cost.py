@@ -40,6 +40,23 @@ class TileCost:
     halo_bytes: float = 0.0  # HBM traffic added by halo windows (overlap
     #                          re-fetch + one-time materialization of the
     #                          gathered operand the Pallas lowerer builds)
+    # raw (datasheet-peak) roofline terms, kept next to the possibly
+    # calibrated t_mem/t_compute — the calibration fit always regresses
+    # on raw terms, never on its own previous output
+    t_mem_raw: float = 0.0
+    t_compute_raw: float = 0.0
+    calibrated: bool = False
+
+
+def _active_calibration(hw: HardwareConfig):
+    """The measured-feedback calibration active for this config, or None.
+    The no-calibration fast path never hashes the config (this runs once
+    per candidate tiling inside the autotile search)."""
+    from ..tune import calibrate
+
+    if not calibrate.any_active():
+        return None
+    return calibrate.get_calibration(hw.fingerprint())
 
 
 def pipelined_latency(t_mem: float, t_compute: float, n_tiles: int,
@@ -249,11 +266,22 @@ def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, 
         total_bytes = n_tiles * bytes_hbm
         t_mem = total_bytes / hw.mem_units[0].bandwidth
         t_compute = 2.0 * macs / hw.peak_flops if hw.peak_flops > 0 else 0.0
+        t_mem_raw, t_compute_raw = t_mem, t_compute
+        cal = _active_calibration(hw)
+        overhead = 0.0
+        if cal is not None:
+            # the paper-exact lines/MAC ranking is left untouched; only
+            # the seconds-uniform terms (what the sweeps score) calibrate
+            t_mem, t_compute = cal.apply(t_mem, t_compute)
+            overhead = cal.overhead_s
         return TileCost(cost=cost, lines=total_lines, macs=macs,
                         bytes_hbm=total_bytes, t_mem=t_mem, t_compute=t_compute,
                         mem_elems=mem_elems, mem_bytes=mem_bytes, n_tiles=n_tiles,
                         feasible=feasible, why=why, plan_bytes=plan_bytes,
-                        latency_s=pipelined_latency(t_mem, t_compute, n_tiles, depth))
+                        t_mem_raw=t_mem_raw, t_compute_raw=t_compute_raw,
+                        calibrated=cal is not None,
+                        latency_s=pipelined_latency(t_mem, t_compute, n_tiles,
+                                                    depth) + overhead)
 
     # ---- roofline model ----------------------------------------------------
     # HBM traffic with *consecutive* reuse, matching the Pallas emission:
@@ -329,12 +357,23 @@ def evaluate_tiling(block: Block, tiles: Mapping[str, int], hw: HardwareConfig, 
             padded = ceil_div(extent, mult) * mult
             util *= extent / padded
     t_compute = flops / (hw.peak_flops * max(util, 1e-6))
+    t_mem_raw, t_compute_raw = t_mem, t_compute
+    cal = _active_calibration(hw)
+    overhead = 0.0
+    if cal is not None:
+        # calibrated terms drive the ranking too: measured feedback can
+        # flip which term dominates and therefore which tiling wins
+        t_mem, t_compute = cal.apply(t_mem, t_compute)
+        overhead = cal.overhead_s
     cost = max(t_mem, t_compute) + 1e-12 * n_tiles
     return TileCost(cost=cost, macs=macs, bytes_hbm=bytes_hbm, t_mem=t_mem,
                     t_compute=t_compute, mem_elems=mem_elems, mem_bytes=mem_bytes,
                     n_tiles=n_tiles, feasible=feasible, why=why,
                     plan_bytes=plan_bytes, halo_bytes=halo_bytes,
-                    latency_s=pipelined_latency(t_mem, t_compute, n_tiles, depth))
+                    t_mem_raw=t_mem_raw, t_compute_raw=t_compute_raw,
+                    calibrated=cal is not None,
+                    latency_s=pipelined_latency(t_mem, t_compute, n_tiles,
+                                                depth) + overhead)
 
 
 # --------------------------------------------------------------------------

@@ -87,6 +87,18 @@ class CompileRecord:
     hw_fingerprint: str = ""
     predicted_latency_s: Dict[str, float] = dataclasses.field(default_factory=dict)
     measured_latency_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # Per-unit roofline terms behind predicted_latency_s (latency_s,
+    # t_mem/t_compute and their raw uncalibrated counterparts) — the
+    # residual log carries them so the calibration fit regresses on raw
+    # terms even after the model is already calibrated.
+    predicted_terms: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    # Where the tilings came from: "analytic" (the autotile search or a
+    # plain disk replay of its choice), "tuned" (a measured-best entry
+    # served by the tuning DB — ``tuned`` carries the entry's provenance:
+    # candidate id, measured latency, measurement source/rounds/age), or
+    # "replay" (caller-supplied tilings via ``compile_with_tilings``).
+    decision_source: str = "analytic"
+    tuned: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def fusion_decisions(self) -> List[Dict]:
         """Accepted/rejected merges recorded by the fusion pass."""
@@ -206,7 +218,8 @@ class _Lowered:
 def _lower(opt: Program, backend: str, interpret: bool, jit: bool,
            hw: Optional[HardwareConfig] = None,
            quarantine: Optional[_cache.QuarantineStore] = None,
-           key: str = "", profile: bool = False) -> _Lowered:
+           key: str = "", profile: bool = False,
+           force_jnp_units: Optional[set] = None) -> _Lowered:
     """Lower the optimized program.  For the pallas backend, a *crash*
     during lowering (as opposed to a known-unsupported legality fallback)
     degrades to the jnp path and negative-caches the key in
@@ -242,7 +255,7 @@ def _lower(opt: Program, backend: str, interpret: bool, jit: bool,
                     fn = lower_program_hybrid(
                         opt, interpret=interpret,
                         pipeline_depth=hw.pipeline_depth if hw is not None else 2,
-                        profile=profile)
+                        profile=profile, force_jnp_units=force_jnp_units)
             except UnsupportedPallas as e:
                 # legality fallback: deterministic and known, no quarantine
                 backend, fallback = "jnp", str(e)
@@ -283,12 +296,15 @@ def _lower(opt: Program, backend: str, interpret: bool, jit: bool,
 
 
 def _attach_profiling(low: _Lowered, record: CompileRecord,
-                      cache: _cache.CompilationCache, interpret: bool) -> Callable:
+                      cache: _cache.CompilationCache, interpret: bool,
+                      tune_db=None, requested_backend: str = "") -> Callable:
     """Wrap a lowered callable so each dispatch folds the lowering's
     per-unit wall times into ``record.measured_latency_s`` (best
     observation wins; the dict is shared with cache-hit records of the
     same artifact) and the first dispatch appends (predicted, measured)
-    rows to the residual JSONL under the cache dir."""
+    rows to the residual JSONL under the cache dir — and, when a tuning
+    DB is attached, records the program's measured latency under its
+    compile identity, so profiled serving traffic *populates* the DB."""
     inner = low.fn
     unit_times = getattr(inner, "unit_times", None)
     state = {"logged": False}
@@ -314,10 +330,48 @@ def _attach_profiling(low: _Lowered, record: CompileRecord,
             state["logged"] = True
             obs_profile.append_residuals(
                 obs_profile.residual_rows(record, interpret),
-                obs_profile.residual_log_path(cache))
+                obs_profile.residual_log_path(cache), db=tune_db)
+            if tune_db is not None and record.tilings and record.ir_fingerprint:
+                try:
+                    tune_db.record(
+                        record.ir_fingerprint, record.hw_fingerprint,
+                        requested_backend or record.backend, interpret,
+                        tilings=record.tilings,
+                        measured_s=sum(record.measured_latency_s.values()),
+                        predicted_s=(sum(record.predicted_latency_s.values())
+                                     or None),
+                        block_backends=record.block_backends,
+                        source="profile")
+                except Exception:
+                    pass  # measurement feedback must never fail a dispatch
         return out
 
     return wrapper
+
+
+# --------------------------------------------------------------------------
+# Measured-feedback tuning support
+# --------------------------------------------------------------------------
+def _resolve_tune(tune, cache: _cache.CompilationCache):
+    """Normalize the ``tune=`` argument: None/False disables, True opens
+    the :class:`~repro.tune.db.TuningDB` next to the cache's disk store
+    (or the default cache dir), and a ``TuningDB`` instance is used as
+    given."""
+    if tune is None or tune is False:
+        return None
+    from ..tune.db import TuningDB
+
+    if isinstance(tune, TuningDB):
+        return tune
+    return TuningDB(dir=cache.disk_dir)
+
+
+def _calibration_fp(hw_fp: str) -> str:
+    """The active calibration's cache-key component for this hardware
+    fingerprint ("" when the cost model is uncalibrated)."""
+    from ..tune import calibrate
+
+    return calibrate.active_fingerprint(hw_fp) if calibrate.any_active() else ""
 
 
 # --------------------------------------------------------------------------
@@ -340,9 +394,14 @@ def compile_cached(prog: Program, hw: HardwareConfig,
     if cache is None:
         cache = _cache.get_default_cache()
     t0 = time.perf_counter()
+    hw_fp = hw.fingerprint()
+    ir_fp = ir_fingerprint(prog)
     key = _cache.content_key(
         "compile", DRIVER_VERSION, _cache.CACHE_VERSION,
-        ir_fingerprint(prog), hw.fingerprint(),
+        ir_fp, hw_fp,
+        # tilings chosen under a calibrated cost model can differ, so
+        # calibrated compiles never collide with uncalibrated ones
+        _calibration_fp(hw_fp),
     )
     hit = cache.get_memory(key)
     if isinstance(hit, tuple) and len(hit) == 2 and isinstance(hit[0], Program):
@@ -363,7 +422,8 @@ def compile_cached(prog: Program, hw: HardwareConfig,
                         disk_hit=payload is not None,
                         compile_time_s=time.perf_counter() - t0,
                         tilings=dict(oracle.chosen), pass_trace=list(pm.trace),
-                        n_kernels=len(groups), groups=groups)
+                        n_kernels=len(groups), groups=groups,
+                        ir_fingerprint=ir_fp, hw_fingerprint=hw_fp)
     cache.put_memory(key, (opt, rec))
     if use_disk:
         cache.put_disk(key, {"tilings": oracle.chosen, "pass_trace": pm.trace,
@@ -382,7 +442,8 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
                interpret: bool = True,
                jit: bool = True,
                use_disk: bool = True,
-               profile: bool = False) -> CompiledProgram:
+               profile: bool = False,
+               tune: Union[None, bool, Any] = None) -> CompiledProgram:
     """Compile a tensor op end-to-end through the cached Stripe pipeline.
 
     ``workers`` enables the parallel autotune search on cold compiles;
@@ -393,6 +454,14 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
     predictions, and the first dispatch appends (predicted, measured)
     rows to ``residuals.jsonl`` under the cache dir (``profile`` is part
     of the cache key — profiled and unprofiled artifacts differ).
+    ``tune`` consults the measured-feedback tuning DB before the analytic
+    autotile search: ``True`` opens the DB next to the cache's disk store,
+    or pass a :class:`repro.tune.TuningDB`.  A fresh-enough measured-best
+    entry replays its tilings (and per-unit backend choices) instead of
+    searching — ``record.decision_source == "tuned"`` — and the entry's
+    candidate id is folded into the cache key, so a better measurement
+    automatically re-keys the artifact.  With ``profile=True`` the first
+    dispatch also records its measurement back into the DB.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
@@ -404,9 +473,24 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
         prog = _as_program(fn_or_contraction, tensors=tensors, out=out, ranges=ranges)
         ir_fp = ir_fingerprint(prog)
         hw_fp = hw.fingerprint()
+        tune_db = _resolve_tune(tune, cache)
+        tuned = None
+        if tune_db is not None:
+            # consulted *before* the memory probe: the tuned entry's
+            # candidate id is part of the key, so a DB update naturally
+            # misses the stale artifact and recompiles with the winner
+            with obs_trace.span("tune.lookup", backend=backend) as sp:
+                tuned = tune_db.lookup(ir_fp, hw_fp, backend, interpret)
+                sp.set(hit=tuned is not None)
+            if tuned is not None:
+                cache.stats.tuned_hits += 1
+            else:
+                cache.stats.tuned_misses += 1
         key = _cache.content_key(
             "stripe_jit", DRIVER_VERSION, _cache.CACHE_VERSION,
             ir_fp, hw_fp, backend, bool(interpret), bool(jit), bool(profile),
+            tuned.fingerprint if tuned is not None else "",
+            _calibration_fp(hw_fp),
         )
         with obs_trace.span("cache.probe", level="memory") as sp:
             hit = cache.get_memory(key)
@@ -431,11 +515,19 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
         with obs_trace.span("cache.probe", level="disk") as sp:
             payload = cache.get_disk(key) if use_disk else None
             sp.set(hit=payload is not None)
-        oracle = TilingOracle(known=(payload or {}).get("tilings"))
+        # the tuned entry's tilings take precedence over the disk replay
+        # (the disk payload under a tuned key holds the same tilings)
+        known = (tuned.tilings if tuned is not None
+                 else (payload or {}).get("tilings"))
+        oracle = TilingOracle(known=known)
         pm = PassManager(hw, oracle=oracle, autotune_workers=workers)
         opt = pm.run(copy.deepcopy(prog))
+        force_jnp = None
+        if tuned is not None and backend == "pallas":
+            force_jnp = {u for u, b in tuned.block_backends.items() if b == "jnp"}
         low = _lower(opt, backend, interpret, jit, hw,
-                     quarantine=cache.quarantine, key=key, profile=profile)
+                     quarantine=cache.quarantine, key=key, profile=profile,
+                     force_jnp_units=force_jnp or None)
         record = CompileRecord(
             key=key, backend=low.backend, hw_name=hw.name,
             cache_hit=False, disk_hit=payload is not None,
@@ -446,12 +538,23 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
             block_backends=low.block_backends, block_fallbacks=low.block_fallbacks,
             quarantined=low.quarantined, quarantine=low.quarantine,
             profiled=bool(profile), ir_fingerprint=ir_fp, hw_fingerprint=hw_fp,
+            decision_source="tuned" if tuned is not None else "analytic",
+            tuned=({"candidate_id": tuned.candidate_id,
+                    "measured_s": tuned.measured_s,
+                    "predicted_s": tuned.predicted_s,
+                    "source": tuned.source, "rounds": tuned.rounds,
+                    "age_s": max(time.time() - tuned.ts, 0.0),
+                    "n_candidates": tuned.n_candidates}
+                   if tuned is not None else {}),
         )
         fn = low.fn
         if profile:
-            record.predicted_latency_s = obs_profile.predicted_unit_latencies(
+            record.predicted_terms = obs_profile.predicted_unit_terms(
                 opt, record.pass_trace)
-            fn = _attach_profiling(low, record, cache, interpret)
+            record.predicted_latency_s = {
+                u: t["latency_s"] for u, t in record.predicted_terms.items()}
+            fn = _attach_profiling(low, record, cache, interpret,
+                                   tune_db=tune_db, requested_backend=backend)
         compiled = CompiledProgram(opt, fn, hw, record)
         cache.put_memory(key, compiled)
         if use_disk:
@@ -462,7 +565,49 @@ def stripe_jit(fn_or_contraction: Union[Program, TileProgram, str, Callable],
                 "n_kernels": low.n_kernels, "groups": low.groups,
                 "block_backends": low.block_backends,
                 "block_fallbacks": low.block_fallbacks,
+                "decision_source": record.decision_source,
             })
         csp.set(cache="disk" if record.disk_hit else "miss",
-                backend_used=low.backend)
+                backend_used=low.backend, decision=record.decision_source)
         return compiled
+
+
+def compile_with_tilings(fn_or_contraction: Union[Program, TileProgram, str, Callable],
+                         hw: HardwareConfig,
+                         tilings: Mapping[str, Mapping[str, int]],
+                         backend: str = "jnp", *,
+                         tensors: Optional[Mapping[str, Tuple]] = None,
+                         out: Optional[str] = None,
+                         ranges: Optional[Mapping[str, int]] = None,
+                         interpret: bool = True,
+                         jit: bool = True,
+                         profile: bool = False) -> CompiledProgram:
+    """Compile with a **fixed tiling assignment** — no cache, no search.
+
+    ``tilings`` uses the tiling-oracle key form (``"<block>#<fp16>"`` ->
+    {var: tile}); blocks absent from it fall back to the analytic search.
+    This is the explore measure-mode's candidate-replay entry: a sweep
+    candidate's tilings are forced through the pass pipeline on the
+    *base* config so the only thing that differs between measured
+    candidates is the tiling (and the backend), never the model."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    t0 = time.perf_counter()
+    prog = _as_program(fn_or_contraction, tensors=tensors, out=out, ranges=ranges)
+    ir_fp = ir_fingerprint(prog)
+    oracle = TilingOracle(known=tilings)
+    pm = PassManager(hw, oracle=oracle)
+    opt = pm.run(copy.deepcopy(prog))
+    low = _lower(opt, backend, interpret, jit, hw, quarantine=None, key="",
+                 profile=profile)
+    record = CompileRecord(
+        key="", backend=low.backend, hw_name=hw.name,
+        compile_time_s=time.perf_counter() - t0,
+        tilings=dict(oracle.chosen), pass_trace=list(pm.trace),
+        fallback_reason=low.fallback, n_kernels=low.n_kernels,
+        groups=low.groups,
+        block_backends=low.block_backends, block_fallbacks=low.block_fallbacks,
+        profiled=bool(profile), ir_fingerprint=ir_fp,
+        hw_fingerprint=hw.fingerprint(), decision_source="replay",
+    )
+    return CompiledProgram(opt, low.fn, hw, record)

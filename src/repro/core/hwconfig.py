@@ -65,16 +65,27 @@ class HardwareConfig:
         not).  The config *name* is deliberately excluded — two configs
         that compile identically hash identically, so design-space sweeps
         dedupe renamed-but-equal points into one compilation-cache entry.
-        Used as the hardware component of compilation-cache keys."""
+        Used as the hardware component of compilation-cache keys.
+
+        Memoized per instance: configs are frozen (every mutation helper
+        returns a fresh instance via ``dataclasses.replace``), and the
+        calibration-aware cost model consults the fingerprint once per
+        candidate tiling — hashing the config thousands of times per
+        autotile search would dominate it."""
+        cached = self.__dict__.get("_fingerprint_memo")
+        if cached is not None:
+            return cached
         from .cache import stable_hash
 
-        return stable_hash([
+        fp = stable_hash([
             "hwconfig",
             [[m.name, m.size_bytes, m.bandwidth, m.cache_line_elems] for m in self.mem_units],
             [[s.name, list(s.dims), s.flops] for s in self.stencils],
             self.peak_flops, self.ici_link_bw, self.pipeline_depth,
             [[name, sorted(params.items())] for name, params in self.passes],
         ])
+        object.__setattr__(self, "_fingerprint_memo", fp)
+        return fp
 
     def with_params(self, **overrides) -> "HardwareConfig":
         """The paper's ``set_config_params``: per-HW-version tweak of pass

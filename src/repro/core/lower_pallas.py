@@ -1282,7 +1282,8 @@ def _place(env: Dict[str, jnp.ndarray], decl: TensorDecl, fn,
 def lower_program_hybrid(prog: Program, interpret: bool = False,
                          pipeline_depth: int = 2,
                          strict: bool = False,
-                         profile: bool = False) -> Callable:
+                         profile: bool = False,
+                         force_jnp_units: Optional[set] = None) -> Callable:
     """Lower every op block / fusion group to one Pallas kernel and
     compose the units in wavefront order; intermediates between groups
     live in outer memory (HBM).
@@ -1298,7 +1299,13 @@ def lower_program_hybrid(prog: Program, interpret: bool = False,
     ``profile=True`` wall-times every unit per dispatch (synchronizing on
     the unit's outputs with ``jax.block_until_ready``), keeping the best
     observation per unit in ``run.unit_times`` ({unit name: seconds}) —
-    the measured side of the cost-model residual log."""
+    the measured side of the cost-model residual log.
+
+    ``force_jnp_units`` (unit names, the "+"-joined member form) skips
+    the Pallas attempt for those units — the tuning DB's replay of a
+    measured per-unit backend choice (a unit that *measured* faster on
+    the jnp path is not re-lowered to Pallas just because it legally
+    could be)."""
     blocks = [s for s in prog.entry.stmts if isinstance(s, Block)]
     if not blocks:
         raise UnsupportedPallas("no op blocks")
@@ -1313,6 +1320,8 @@ def lower_program_hybrid(prog: Program, interpret: bool = False,
     n_pallas = 0
     for u in units:
         try:
+            if force_jnp_units and u.name in force_jnp_units:
+                raise UnsupportedPallas("tuned: measured faster on jnp")
             kernels = []
             regions = []
             for b in u.blocks:

@@ -250,6 +250,11 @@ def autotile_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program
                 "latency_s": cost.latency_s, "plan_bytes": cost.plan_bytes,
                 "halo_bytes": cost.halo_bytes,
                 "pipeline_depth": hw.pipeline_depth,
+                # raw (uncalibrated) roofline terms: the calibration fit
+                # regresses measured time on these, so an already
+                # calibrated trace never feeds back into its own fit
+                "t_mem_raw": cost.t_mem_raw, "t_compute_raw": cost.t_compute_raw,
+                "calibrated": cost.calibrated,
             })
         if all(tiles.get(v, free[v]) >= free[v] for v in free) and cost.feasible:
             # whole op fits in one tile: keep flat, mark it

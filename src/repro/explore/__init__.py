@@ -20,7 +20,8 @@ CLI::
     python -m repro.explore --space tpu-sweep --workloads default --budget 32
 """
 from .report import build_report, dominating_baseline, pareto_front, to_markdown, write_report
-from .runner import PointResult, SweepResult, run_sweep, score_config, validate_top_k
+from .runner import (PointResult, SweepResult, measure_candidates, run_sweep,
+                     score_config, validate_top_k)
 from .space import Axis, SearchSpace, apply_axis, get_space, BUILTIN_SPACES
 from .workloads import CORPORA, Workload, get_workloads
 
@@ -28,6 +29,7 @@ __all__ = [
     "Axis", "SearchSpace", "apply_axis", "get_space", "BUILTIN_SPACES",
     "Workload", "get_workloads", "CORPORA",
     "PointResult", "SweepResult", "run_sweep", "score_config", "validate_top_k",
+    "measure_candidates",
     "pareto_front", "dominating_baseline", "build_report", "to_markdown",
     "write_report",
 ]

@@ -44,6 +44,13 @@ def main(argv=None) -> int:
     ap.add_argument("--parallel", type=int, default=0,
                     help="process-pool width for scoring unique points "
                          "(0/1 = serial)")
+    ap.add_argument("--measure", type=int, default=0,
+                    help="measure mode: wall-time up to N candidate tilings "
+                         "per workload on pallas-interpret and record every "
+                         "measurement in the tuning DB (0 disables)")
+    ap.add_argument("--tune-db", default=None, dest="tune_db",
+                    help="tuning-DB directory for --measure "
+                         "(default: the compilation-cache dir)")
     ap.add_argument("--out", default="explore_out",
                     help="output directory for the JSON/markdown report")
     ap.add_argument("--cache-dir", default=None,
@@ -56,10 +63,17 @@ def main(argv=None) -> int:
         ap.error(str(e))
     cache_dir = args.cache_dir or f"{args.out}/cache"
 
+    tune_db = None
+    if args.measure > 0:
+        from ..tune.db import TuningDB
+
+        tune_db = TuningDB(dir=args.tune_db or cache_dir)
+
     sweep = run_sweep(
         space, args.workloads, budget=args.budget, strategy=args.strategy,
         seed=args.seed, cache_dir=cache_dir, parallel=args.parallel,
-        measure_top_k=args.top_k, measure_backend=args.backend)
+        measure_top_k=args.top_k, measure_backend=args.backend,
+        measure=args.measure, tune_db=tune_db)
     jpath, mpath = write_report(sweep, args.out)
     print(to_markdown(sweep))
     print(f"wrote {jpath} and {mpath}")

@@ -77,6 +77,7 @@ def build_report(sweep: SweepResult) -> Dict:
         "pareto_front": front,
         "dominating_baseline": dom,
         "validation": sweep.validation,
+        "measurement": sweep.measurement,
     }
 
 
@@ -139,7 +140,34 @@ def to_markdown(sweep: SweepResult, max_rows: int = 24) -> str:
         lines.append("")
         lines.append(f"predicted rank: {v['predicted_rank']}  |  "
                      f"measured rank: {v['measured_rank']} "
-                     f"(-1 = baseline)")
+                     f"(-1 = baseline)"
+                     + (f"  |  {v['rounds']} interleaved rounds"
+                        if v.get("rounds") else ""))
+    if sweep.measurement:
+        m = sweep.measurement
+        lines.append("")
+        lines.append(f"## Measured autotuning ({m['backend']}"
+                     f"{', interpret' if m.get('interpret') else ''}; "
+                     f"min of {m['rounds']} interleaved rounds)")
+        lines.append("")
+        lines.append("| workload | candidates | analytic (s/call) | "
+                     "measured best (s/call) | speedup | winner |")
+        lines.append("|---|---:|---:|---:|---:|---|")
+        for w, wl in m["workloads"].items():
+            if wl.get("error"):
+                lines.append(f"| `{w}` | - | - | - | - | err: {wl['error']} |")
+                continue
+            # the measured winner is *promoted*: its candidate id is the
+            # tuning-DB best, which stripe_jit(tune=...) replays
+            speed = wl.get("speedup_vs_analytic")
+            lines.append(
+                f"| `{w}` | {wl['n_candidates']} | "
+                f"{wl['analytic_s']:.4g} | {wl['best_s']:.4g} | "
+                f"{speed:.2f}x | `{wl['best_candidate']}`"
+                f"{' (analytic held)' if not wl['improved'] else ''} |")
+        lines.append("")
+        lines.append("every measurement above is recorded in the tuning DB; "
+                     "`stripe_jit(..., tune=...)` replays each winner.")
     lines.append("")
     return "\n".join(lines)
 

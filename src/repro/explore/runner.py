@@ -29,8 +29,9 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 from ..core import cache as _cache
 from ..core.cost import ProgramScore, score_pass_trace
 from ..obs import trace as obs_trace
-from ..core.driver import compile_cached, stripe_jit
+from ..core.driver import compile_cached, compile_with_tilings, stripe_jit
 from ..core.hwconfig import HardwareConfig
+from ..tune.measure import DEFAULT_CALLS, DEFAULT_ROUNDS, measure_interleaved
 from .space import SearchSpace
 from .workloads import Workload, get_workloads
 
@@ -136,6 +137,7 @@ class SweepResult:
     cache_stats: Dict[str, int]
     wall_time_s: float
     validation: Optional[Dict] = None
+    measurement: Optional[Dict] = None  # measure-mode summary (tuning DB feed)
 
     def unique_points(self) -> List[PointResult]:
         return [p for p in self.points if p.dedup_of is None and not p.error]
@@ -144,26 +146,36 @@ class SweepResult:
 def run_sweep(space: SearchSpace, workload_spec: str = "default", *,
               budget: int = 32, strategy: str = "grid", seed: int = 0,
               cache_dir: Optional[str] = None, parallel: int = 0,
-              measure_top_k: int = 0, measure_backend: str = "jnp") -> SweepResult:
+              measure_top_k: int = 0, measure_backend: str = "jnp",
+              measure: int = 0, tune_db=None) -> SweepResult:
     """Drive a full sweep.  ``cache_dir`` is the on-disk compilation-cache
     directory shared by all points/processes (None = in-memory only —
     sweeps never write the user's default ``~/.cache/stripe-repro``
     unless pointed there explicitly).  ``parallel`` > 1 fans unique
     points out over a process pool.  ``measure_top_k`` > 0 additionally
     runs the K best predicted points (plus the baseline) on the real
-    ``measure_backend`` and records the measured ranking."""
+    ``measure_backend`` and records the measured ranking.
+
+    ``measure`` > 0 runs the **measure mode**: up to that many candidate
+    tilings per workload (analytic best, sweep-point winners, scaled
+    perturbations) are wall-timed on pallas-interpret and every
+    measurement lands in ``tune_db`` (a :class:`~repro.tune.TuningDB`;
+    None opens one in ``cache_dir``) — later ``stripe_jit`` compiles of
+    the same workload replay the measured winner."""
     with obs_trace.span("explore.sweep", strategy=strategy, budget=budget,
                         workloads=workload_spec):
         return _run_sweep(space, workload_spec, budget=budget,
                           strategy=strategy, seed=seed, cache_dir=cache_dir,
                           parallel=parallel, measure_top_k=measure_top_k,
-                          measure_backend=measure_backend)
+                          measure_backend=measure_backend, measure=measure,
+                          tune_db=tune_db)
 
 
 def _run_sweep(space: SearchSpace, workload_spec: str = "default", *,
                budget: int = 32, strategy: str = "grid", seed: int = 0,
                cache_dir: Optional[str] = None, parallel: int = 0,
-               measure_top_k: int = 0, measure_backend: str = "jnp") -> SweepResult:
+               measure_top_k: int = 0, measure_backend: str = "jnp",
+               measure: int = 0, tune_db=None) -> SweepResult:
     t_start = time.perf_counter()
     workloads = get_workloads(workload_spec)
     cache = _cache.CompilationCache(disk_dir=cache_dir, use_disk=cache_dir is not None)
@@ -281,7 +293,16 @@ def _run_sweep(space: SearchSpace, workload_spec: str = "default", *,
                         wall_time_s=time.perf_counter() - t_start)
     if measure_top_k > 0:
         sweep.validation = validate_top_k(sweep, measure_top_k,
-                                          backend=measure_backend, cache=cache)
+                                          backend=measure_backend, cache=cache,
+                                          db=tune_db)
+    if measure > 0:
+        if tune_db is None:
+            from ..tune.db import TuningDB
+
+            tune_db = TuningDB(dir=cache_dir)
+        sweep.measurement = measure_candidates(sweep, db=tune_db,
+                                               max_candidates=measure,
+                                               cache=cache)
     sweep.wall_time_s = time.perf_counter() - t_start
     return sweep
 
@@ -306,50 +327,225 @@ def _random_arrays(prog, seed: int = 0):
     return arrays
 
 
-def _measure_config(hw: HardwareConfig, workloads: Sequence[Workload],
-                    backend: str, cache, n: int = 3) -> Dict[str, float]:
+def _timed_thunk(compiled, arrays):
     import jax
 
-    out: Dict[str, float] = {}
-    for w in workloads:
-        prog = w.build()
-        compiled = stripe_jit(prog, hw, backend=backend, cache=cache)
-        arrays = _random_arrays(compiled.program.source or compiled.program)
-        jax.block_until_ready(compiled(arrays))  # compile + warm
-        t0 = time.perf_counter()
-        for _ in range(n):
-            jax.block_until_ready(compiled(arrays))
-        out[w.name] = (time.perf_counter() - t0) / n * 1e6  # us/call
-    return out
+    def thunk():
+        jax.block_until_ready(compiled(arrays))
+    return thunk
 
 
 def validate_top_k(sweep: SweepResult, k: int, backend: str = "jnp",
-                   cache=None) -> Dict:
+                   cache=None, rounds: int = DEFAULT_ROUNDS,
+                   calls: int = DEFAULT_CALLS, db=None) -> Dict:
     """Measure the K best predicted points plus the baseline on a real
-    backend; report predicted vs measured ranking."""
+    backend; report predicted vs measured ranking.
+
+    Timing uses the min-of-interleaved-rounds estimator (all candidates
+    compile and warm first, then alternate within each round — a noise
+    burst inflates one round of everything instead of biasing whichever
+    config ran last), with the round count recorded in the result.  When
+    ``db`` is a :class:`~repro.tune.TuningDB`, every measurement is also
+    recorded there."""
     workloads = get_workloads(sweep.workload_spec)
     ranked = sorted(sweep.unique_points(), key=lambda p: p.latency_s)[:k]
     entries = []
-    for res in [sweep.baseline] + ranked:
+    thunks: Dict[Tuple[int, str], Any] = {}
+    records: Dict[Tuple[int, str], Any] = {}
+    for pos, res in enumerate([sweep.baseline] + ranked):
         entry = {"index": res.index, "config": res.config_name,
                  "predicted_latency_s": res.latency_s, "error": ""}
         with obs_trace.span("explore.validate", config=res.config_name,
                             backend=backend) as sp:
             try:
                 hw = sweep.space.base_config() if res.index < 0 else sweep.space.apply(res.point)
-                per_wl = _measure_config(hw, workloads, backend, cache)
-                entry["measured_us"] = per_wl
-                entry["measured_total_us"] = sum(per_wl.values())
+                for w in workloads:
+                    compiled = stripe_jit(w.build(), hw, backend=backend,
+                                          cache=cache)
+                    arrays = _random_arrays(compiled.program.source
+                                            or compiled.program)
+                    thunks[(pos, w.name)] = _timed_thunk(compiled, arrays)
+                    records[(pos, w.name)] = compiled.record
             except Exception as e:
                 entry["error"] = f"{type(e).__name__}: {e}"
                 entry["measured_total_us"] = None  # JSON-safe; ranked last
                 sp.set(error=entry["error"])
         entries.append(entry)
+
+    measures = measure_interleaved(thunks, rounds=rounds, calls=calls)
+    for pos, entry in enumerate(entries):
+        if entry["error"]:
+            continue
+        per_wl = {w.name: measures[(pos, w.name)].min_s * 1e6
+                  for w in workloads if (pos, w.name) in measures}
+        if len(per_wl) < len(workloads):
+            entry["error"] = "measurement dropped (thunk failed in warmup)"
+            entry["measured_total_us"] = None
+            continue
+        entry["measured_us"] = per_wl
+        entry["measured_total_us"] = sum(per_wl.values())
+    if db is not None:
+        for key, m in measures.items():
+            rec = records.get(key)
+            if rec is None or not rec.ir_fingerprint:
+                continue
+            db.record(rec.ir_fingerprint, rec.hw_fingerprint, backend, True,
+                      tilings=rec.tilings, measured_s=m.min_s,
+                      predicted_s=score_pass_trace(rec.pass_trace).latency_s,
+                      block_backends=rec.block_backends, rounds=m.rounds,
+                      calls=m.calls, source="explore.validate",
+                      workload=key[1])
     by_pred = sorted(entries, key=lambda e: e["predicted_latency_s"])
     by_meas = sorted(entries, key=lambda e: (e["measured_total_us"] is None,
                                              e["measured_total_us"] or 0.0))
     return {
         "top_k": k, "backend": backend, "entries": entries,
+        "rounds": rounds, "calls": calls,
+        "estimator": "min-of-interleaved-rounds",
         "predicted_rank": [e["index"] for e in by_pred],
         "measured_rank": [e["index"] for e in by_meas],
     }
+
+
+# --------------------------------------------------------------------------
+# Measure mode: candidate tilings -> wall time -> tuning DB
+# --------------------------------------------------------------------------
+def _scale_tiling(tilings: Mapping[str, Mapping[str, int]],
+                  factor: float) -> Dict[str, Dict[str, int]]:
+    return {blk: {v: max(1, int(t * factor)) for v, t in tiles.items()}
+            for blk, tiles in tilings.items()}
+
+
+def _candidate_tilings(sweep: SweepResult, workload: Workload, base_tilings,
+                       cache, max_candidates: int) -> List[Dict[str, Dict[str, int]]]:
+    """Candidate tilings for one workload, analytic first: the base
+    config's analytic choice, sweep-point winners' tilings remapped onto
+    the base blocks (by block name — a point whose fusion decisions
+    differ contributes only its matching groups), and global halve /
+    double perturbations of the analytic tiles."""
+    from ..tune.db import candidate_id as cid
+
+    cands: List[Dict[str, Dict[str, int]]] = [dict(base_tilings)]
+    seen = {cid(base_tilings)}
+
+    def add(c):
+        key = cid(c)
+        if key not in seen and len(cands) < max_candidates:
+            seen.add(key)
+            cands.append(c)
+
+    base_by_name = {k.split("#")[0]: k for k in base_tilings}
+    for p in sorted(sweep.unique_points(), key=lambda r: r.latency_s):
+        if len(cands) >= max_candidates:
+            break
+        try:
+            hw = sweep.space.apply(p.point)
+            _, rec = compile_cached(workload.build(), hw, cache=cache)
+        except Exception:
+            continue
+        remapped = dict(base_tilings)
+        hit = False
+        for key, tiles in rec.tilings.items():
+            bk = base_by_name.get(key.split("#")[0])
+            if bk is not None and remapped[bk] != tiles:
+                remapped[bk] = dict(tiles)
+                hit = True
+        if hit:
+            add(remapped)
+    for factor in (0.5, 2.0, 0.25):
+        add(_scale_tiling(base_tilings, factor))
+    return cands
+
+
+def measure_candidates(sweep: SweepResult, *, db, backend: str = "pallas",
+                       max_candidates: int = 6, rounds: int = 2,
+                       calls: int = 1, reject_factor: float = 5.0,
+                       cache=None) -> Dict:
+    """Measure-mode autotuning: wall-time candidate tilings per workload
+    on the sweep's base config and record **every** measurement into the
+    tuning DB (``db``); the measured winner becomes the entry's best,
+    which later ``stripe_jit(..., tune=...)`` compiles replay.
+
+    Candidates run on ``backend`` under ``interpret=True`` (tile sizes
+    change the pallas grid, so interpreted wall time carries real tiling
+    signal; the jnp lowering is tiling-independent).  A real-hardware
+    timer drops in via ``measure_interleaved``'s ``timer`` hook — the
+    estimator and DB schema don't change.  The analytic choice is always
+    candidate 0, so the summary's ``improved`` flag is measured-winner
+    vs analytic on identical harnesses.
+
+    Interpreted wall time grows with grid-step count, so a badly-tiled
+    candidate can cost 100x the analytic one per call: any candidate
+    whose single warmup call runs slower than ``reject_factor`` x the
+    analytic warmup is **early-rejected** — recorded in the DB from that
+    one shot (``rounds=1``, honestly labeled) instead of burning full
+    interleaved rounds on a certain loser."""
+    base_hw = sweep.space.base_config()
+    workloads = get_workloads(sweep.workload_spec)
+    summary: Dict[str, Any] = {"backend": backend, "interpret": True,
+                               "rounds": rounds, "calls": calls,
+                               "workloads": {}}
+    for w in workloads:
+        with obs_trace.span("explore.measure", workload=w.name,
+                            backend=backend):
+            try:
+                _, base_rec = compile_cached(w.build(), base_hw, cache=cache)
+            except Exception as e:
+                summary["workloads"][w.name] = {
+                    "error": f"{type(e).__name__}: {e}"}
+                continue
+            cands = _candidate_tilings(sweep, w, base_rec.tilings, cache,
+                                       max_candidates)
+            thunks: Dict[int, Any] = {}
+            meta: Dict[int, Any] = {}
+            warm_s: Dict[int, float] = {}
+            for i, cand in enumerate(cands):
+                try:
+                    compiled = compile_with_tilings(
+                        w.build(), base_hw, cand, backend=backend,
+                        interpret=True)
+                    arrays = _random_arrays(compiled.program.source
+                                            or compiled.program)
+                    thunk = _timed_thunk(compiled, arrays)
+                    t0 = time.perf_counter()
+                    thunk()  # trace + compile + one warm execution
+                    warm_s[i] = time.perf_counter() - t0
+                    thunks[i] = thunk
+                    meta[i] = compiled.record
+                except Exception:
+                    continue  # an infeasible perturbation is just skipped
+            cut = (reject_factor * warm_s[0]
+                   if 0 in warm_s and reject_factor > 0 else None)
+            rejected = {i for i in thunks
+                        if cut is not None and i != 0 and warm_s[i] > cut}
+            measures = measure_interleaved(
+                {i: thunks[i] for i in thunks if i not in rejected},
+                rounds=rounds, calls=calls, warmup=0)
+            wl: Dict[str, Any] = {"n_candidates": len(measures) + len(rejected),
+                                  "n_rejected": len(rejected),
+                                  "analytic_s": None, "best_s": None,
+                                  "best_candidate": None, "improved": False}
+            timings = {i: (m.min_s, m.rounds, m.calls)
+                       for i, m in measures.items()}
+            for i in rejected:  # one-shot evidence: still worth keeping
+                timings[i] = (warm_s[i], 1, 1)
+            for i, (min_s, n_rounds, n_calls) in sorted(timings.items()):
+                rec = meta[i]
+                predicted = score_pass_trace(rec.pass_trace).latency_s
+                cid = db.record(
+                    base_rec.ir_fingerprint, base_rec.hw_fingerprint,
+                    backend, True, tilings=rec.tilings, measured_s=min_s,
+                    predicted_s=predicted, rounds=n_rounds, calls=n_calls,
+                    source=("explore.measure.rejected" if i in rejected
+                            else "explore.measure"), workload=w.name)
+                if i == 0:
+                    wl["analytic_s"] = min_s
+                if wl["best_s"] is None or min_s < wl["best_s"]:
+                    wl["best_s"] = min_s
+                    wl["best_candidate"] = cid
+            if wl["analytic_s"] is not None and wl["best_s"] is not None:
+                wl["improved"] = wl["best_s"] < wl["analytic_s"]
+                wl["speedup_vs_analytic"] = (wl["analytic_s"] / wl["best_s"]
+                                             if wl["best_s"] else None)
+            summary["workloads"][w.name] = wl
+    return summary

@@ -69,19 +69,30 @@ def cmd_summarize(args) -> int:
 
 def cmd_residuals(args) -> int:
     rows = profile.read_residuals(args.path)
-    summary = profile.summarize_residuals(rows)
+    # rows rotated out of the log live on as running summaries in the
+    # tuning DB next to it — merge them so the bias covers full history
+    path = profile.residual_log_path() if args.path is None else profile.Path(args.path)
+    folded = []
+    try:
+        from ..tune.db import TuningDB
+
+        folded = TuningDB(dir=path.parent).residual_summaries()
+    except Exception:
+        pass
+    summary = profile.summarize_residuals(rows, folded=folded)
     if args.json:
         print(json.dumps(summary, indent=2, sort_keys=True))
         return 0
-    path = args.path or profile.residual_log_path()
     print(f"# {path}: {summary['rows']} residual rows "
-          f"({summary['pairs_with_prediction']} with predictions)")
+          f"({summary['live_rows']} live, {summary['folded_rows']} folded "
+          f"into the tuning DB; "
+          f"{summary['pairs_with_prediction']} with predictions)")
     for backend, n in summary["by_backend"].items():
         print(f"  backend {backend}: {n}")
     g = summary["measured_over_predicted_gmean"]
     if g is not None:
         print(f"  measured/predicted geometric mean: {g:.3f}x")
-    return 0 if rows else 1
+    return 0 if rows or folded else 1
 
 
 def main(argv=None) -> int:

@@ -32,7 +32,21 @@ from typing import Any, Dict, List, Optional
 
 RESIDUAL_LOG_NAME = "residuals.jsonl"
 
+# Rotation: the log is compacted once it exceeds this many rows (the
+# newest half is kept; older rows fold into the tuning DB's running
+# residual summaries, so long-run bias statistics survive rotation).
+ENV_RESIDUAL_CAP = "STRIPE_RESIDUAL_CAP"
+DEFAULT_RESIDUAL_CAP = 20_000
+
 _write_lock = threading.Lock()
+
+
+def residual_cap() -> int:
+    """The configured rotation cap (rows); <= 0 disables rotation."""
+    try:
+        return int(os.environ.get(ENV_RESIDUAL_CAP, DEFAULT_RESIDUAL_CAP))
+    except ValueError:
+        return DEFAULT_RESIDUAL_CAP
 
 
 def residual_log_path(cache=None) -> Path:
@@ -45,22 +59,72 @@ def residual_log_path(cache=None) -> Path:
     return base / RESIDUAL_LOG_NAME
 
 
-def append_residuals(rows: List[Dict[str, Any]], path=None) -> Optional[Path]:
+def append_residuals(rows: List[Dict[str, Any]], path=None,
+                     cap: Optional[int] = None, db=None) -> Optional[Path]:
     """Append rows to the residual JSONL (atomic at line granularity:
     one ``write`` of the whole batch under a process-wide lock).  I/O
-    failures are swallowed — profiling must never fail the dispatch."""
+    failures are swallowed — profiling must never fail the dispatch.
+
+    Growth is bounded: past ``cap`` rows (``$STRIPE_RESIDUAL_CAP``,
+    default 20k; <= 0 disables) the log rotates — the newest ``cap // 2``
+    rows are kept and the older ones fold into the tuning DB next to the
+    log (``db`` overrides which DB; None opens ``tuning_db.json`` in the
+    log's directory), so ``python -m repro.obs residuals`` still reports
+    the full history via the DB's running summaries."""
     if not rows:
         return None
     p = Path(path) if path is not None else residual_log_path()
     data = "".join(json.dumps(r, sort_keys=True) + "\n" for r in rows)
+    limit = residual_cap() if cap is None else int(cap)
     try:
         with _write_lock:
             p.parent.mkdir(parents=True, exist_ok=True)
             with open(p, "a") as f:
                 f.write(data)
+            if limit > 0:
+                _rotate_locked(p, limit, db)
     except OSError:
         return None
     return p
+
+
+def _rotate_locked(p: Path, cap: int, db=None) -> None:
+    """Compact the log in place once it exceeds ``cap`` rows (caller
+    holds the write lock).  Never raises."""
+    try:
+        with open(p) as f:
+            lines = [ln for ln in f if ln.strip()]
+    except OSError:
+        return
+    if len(lines) <= cap:
+        return
+    keep = lines[-max(cap // 2, 1):]
+    fold = lines[: len(lines) - len(keep)]
+    try:
+        if db is None:
+            from ..tune.db import TuningDB
+
+            db = TuningDB(dir=p.parent)
+        folded_rows = []
+        for ln in fold:
+            try:
+                folded_rows.append(json.loads(ln))
+            except ValueError:
+                continue
+        db.fold_residuals(folded_rows)
+    except Exception:
+        # compaction must never fail profiling; the rows are still
+        # dropped below so the log stays bounded either way
+        pass
+    try:
+        import tempfile
+
+        fd, tmp = tempfile.mkstemp(dir=str(p.parent), suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            f.writelines(keep)
+        os.replace(tmp, p)
+    except OSError:
+        pass
 
 
 def read_residuals(path=None) -> List[Dict[str, Any]]:
@@ -83,39 +147,64 @@ def read_residuals(path=None) -> List[Dict[str, Any]]:
     return rows
 
 
-def summarize_residuals(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
+def summarize_residuals(rows: List[Dict[str, Any]],
+                        folded: Optional[List[Dict[str, Any]]] = None) -> Dict[str, Any]:
     """Aggregate residual rows: count, per-backend counts, and the
     geometric-mean ratio measured/predicted where both are present (the
-    cost model's systematic bias on this hardware)."""
+    cost model's systematic bias on this hardware).
+
+    ``folded`` takes the tuning DB's running residual summaries (rows
+    rotated out of the log by :func:`append_residuals`); their pair
+    counts and summed log ratios merge into the live rows' statistics so
+    the reported bias covers the full history, not just the log tail."""
     import math
 
     n = len(rows)
     backends: Dict[str, int] = {}
-    log_ratios: List[float] = []
+    log_sum = 0.0
+    pairs = 0
     for r in rows:
         backends[str(r.get("backend"))] = backends.get(str(r.get("backend")), 0) + 1
         p, m = r.get("predicted_s"), r.get("measured_s")
         if p and m and p > 0 and m > 0:
-            log_ratios.append(math.log(m / p))
-    gmean = math.exp(sum(log_ratios) / len(log_ratios)) if log_ratios else None
+            log_sum += math.log(m / p)
+            pairs += 1
+    folded_rows = 0
+    folded_pairs = 0
+    for s in folded or []:
+        folded_rows += int(s.get("rows", 0))
+        fp = int(s.get("pairs", 0))
+        folded_pairs += fp
+        log_sum += float(s.get("sum_log_ratio", 0.0))
+        b = str(s.get("backend"))
+        backends[b] = backends.get(b, 0) + int(s.get("rows", 0))
+    total_pairs = pairs + folded_pairs
+    gmean = math.exp(log_sum / total_pairs) if total_pairs else None
     return {
-        "rows": n,
+        "rows": n + folded_rows,
+        "live_rows": n,
+        "folded_rows": folded_rows,
         "by_backend": dict(sorted(backends.items())),
-        "pairs_with_prediction": len(log_ratios),
+        "pairs_with_prediction": total_pairs,
         "measured_over_predicted_gmean": gmean,
     }
 
 
-def predicted_unit_latencies(opt_program, pass_trace) -> Dict[str, float]:
-    """Per-lowering-unit predicted latency from the pass trace.
+_TERM_KEYS = ("latency_s", "t_mem", "t_compute", "t_mem_raw", "t_compute_raw")
+
+
+def predicted_unit_terms(opt_program, pass_trace) -> Dict[str, Dict[str, Any]]:
+    """Per-lowering-unit predicted cost terms from the pass trace.
 
     The autotile pass reports one analytic record per optimized block
-    (``latency_s`` = the pipelined roofline estimate).  Lowering units
-    are keyed by their "+"-joined *semantic* member names (the hybrid
-    composer's unit naming), so each autotile record is attributed to
-    the unit whose member set covers the record's block; records that
-    match no unit (e.g. blocks the later passes restructure) keep their
-    own block name."""
+    (``latency_s`` = the pipelined roofline estimate, plus the raw and
+    calibrated roofline terms).  Lowering units are keyed by their
+    "+"-joined *semantic* member names (the hybrid composer's unit
+    naming), so each autotile record is attributed to the unit whose
+    member set covers the record's block; records that match no unit
+    (e.g. blocks the later passes restructure) keep their own block
+    name.  Terms are summed per unit; ``calibrated`` is true when any
+    contributing record was scored with an active calibration."""
     from ..core.ir import Block
     from ..core.passes.fuse import members_of
 
@@ -136,24 +225,35 @@ def predicted_unit_latencies(opt_program, pass_trace) -> Dict[str, float]:
             entries = [e for e in entry[2] if isinstance(e, dict) and "block" in e]
             break
 
-    predicted: Dict[str, float] = {}
+    terms: Dict[str, Dict[str, Any]] = {}
     for e in entries:
-        lat = float(e.get("latency_s", 0.0) or 0.0)
         bases = {p.split(".")[0] for p in str(e["block"]).split("+")}
-        for uname, members in units:
+        uname = str(e["block"])
+        for name, members in units:
             if bases & members:
-                predicted[uname] = predicted.get(uname, 0.0) + lat
+                uname = name
                 break
-        else:
-            predicted[str(e["block"])] = predicted.get(str(e["block"]), 0.0) + lat
-    return predicted
+        t = terms.setdefault(uname, {k: 0.0 for k in _TERM_KEYS})
+        for k in _TERM_KEYS:
+            t[k] += float(e.get(k, 0.0) or 0.0)
+        t["calibrated"] = bool(t.get("calibrated")) or bool(e.get("calibrated"))
+    return terms
+
+
+def predicted_unit_latencies(opt_program, pass_trace) -> Dict[str, float]:
+    """Per-lowering-unit predicted latency from the pass trace (the
+    ``latency_s`` slice of :func:`predicted_unit_terms`)."""
+    return {u: t["latency_s"]
+            for u, t in predicted_unit_terms(opt_program, pass_trace).items()}
 
 
 def residual_rows(record, interpret: bool) -> List[Dict[str, Any]]:
     """Build residual-log rows from a profiled CompileRecord's
     (predicted, measured) per-unit latencies."""
     rows = []
+    terms = getattr(record, "predicted_terms", None) or {}
     for unit, measured in sorted(record.measured_latency_s.items()):
+        t = terms.get(unit) or {}
         rows.append({
             "ir_fingerprint": record.ir_fingerprint,
             "hw_fingerprint": record.hw_fingerprint,
@@ -164,6 +264,11 @@ def residual_rows(record, interpret: bool) -> List[Dict[str, Any]]:
             "interpret": bool(interpret),
             "predicted_s": record.predicted_latency_s.get(unit),
             "measured_s": measured,
+            # raw roofline terms feed the calibration fit; the flag marks
+            # rows whose prediction already had a calibration applied
+            "t_mem_raw": t.get("t_mem_raw"),
+            "t_compute_raw": t.get("t_compute_raw"),
+            "calibrated": bool(t.get("calibrated")),
             "ts": time.time(),
             "pid": os.getpid(),
         })

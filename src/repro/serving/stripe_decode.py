@@ -31,7 +31,7 @@ which upcasts for scores/values); callers cast in and out.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax.numpy as jnp
 
@@ -51,7 +51,8 @@ _FUSABLE_ACT = {
 
 def _jit_opts(cfg: "EngineLikeConfig") -> Dict:
     return dict(backend=cfg.backend, interpret=cfg.interpret,
-                use_disk=cfg.use_disk, cache=cfg.cache, profile=cfg.profile)
+                use_disk=cfg.use_disk, cache=cfg.cache, profile=cfg.profile,
+                tune=cfg.tune)
 
 
 @dataclasses.dataclass
@@ -64,6 +65,7 @@ class EngineLikeConfig:
     use_disk: bool = True
     cache: Optional[_cache.CompilationCache] = None
     profile: bool = False
+    tune: Any = None  # a repro.tune.TuningDB, or None
 
 
 @dataclasses.dataclass

@@ -1,0 +1,43 @@
+"""Measured-feedback autotuning (ROADMAP item 2).
+
+Three pieces close the loop between the analytic cost model and real
+measurement:
+
+* :mod:`repro.tune.db` — the persistent :class:`TuningDB` keyed by
+  IR fingerprint x hardware fingerprint x backend x interpret-mode,
+  recording measured candidate tilings and serving the measured best
+  back into ``stripe_jit`` (decision source ``tuned``);
+* :mod:`repro.tune.measure` — the min-of-interleaved-rounds timing
+  harness every DB-feeding measurement goes through;
+* :mod:`repro.tune.calibrate` — robust per-term regression fitting
+  ``measured ~= a*t_mem + b*t_compute + c`` from accumulated residual
+  pairs, activated per hardware fingerprint so ``evaluate_tiling``
+  predicts calibrated latencies.
+"""
+from .calibrate import (
+    Calibration,
+    clear_calibrations,
+    fit_calibration,
+    get_calibration,
+    load_calibrations,
+    save_calibrations,
+    set_calibration,
+)
+from .db import TunedEntry, TuningDB, candidate_id, entry_key
+from .measure import Measurement, measure_interleaved
+
+__all__ = [
+    "Calibration",
+    "Measurement",
+    "TunedEntry",
+    "TuningDB",
+    "candidate_id",
+    "clear_calibrations",
+    "entry_key",
+    "fit_calibration",
+    "get_calibration",
+    "load_calibrations",
+    "measure_interleaved",
+    "save_calibrations",
+    "set_calibration",
+]

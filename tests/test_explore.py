@@ -213,6 +213,9 @@ def test_validation_measures_top_k_on_jnp(tmp_path):
         assert e["measured_total_us"] > 0
         assert set(e["measured_us"]) == {"mm_bias_gelu", "fig4_conv"}
     assert sorted(v["predicted_rank"]) == sorted(v["measured_rank"])
+    # the estimator and its round/call counts are part of the result
+    assert v["estimator"] == "min-of-interleaved-rounds"
+    assert v["rounds"] >= 1 and v["calls"] >= 1
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,462 @@
+"""Measured-feedback autotuning (repro.tune): the persistent tuning DB,
+driver replay of measured winners, online cost-model calibration, and
+the residual-log rotation that feeds it.
+
+The DB under test always lives in a per-test tmpdir; the autouse
+``_isolated_stripe_cache`` conftest fixture keeps the default cache dir
+out of ``~/.cache/stripe-repro`` for the code paths that fall back to it.
+"""
+import json
+import multiprocessing
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api, configs
+from repro.core.cache import CompilationCache
+from repro.core.hwconfig import get_config
+from repro.models.build import build_model
+from repro.obs.profile import (append_residuals, read_residuals,
+                               summarize_residuals)
+from repro.reliability import faults
+from repro.tune import (Calibration, TuningDB, clear_calibrations,
+                        entry_key, fit_calibration, load_calibrations,
+                        measure_interleaved, save_calibrations,
+                        set_calibration)
+
+
+def _mm():
+    return api.single_op_program(
+        "O[i, j] += A[i, c] * B[c, j]",
+        {"A": ((32, 16), "float32"), "B": ((16, 24), "float32"),
+         "O": ((32, 24), "float32")},
+        out="O")
+
+
+def _mm_arrays(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"A": rng.randn(32, 16).astype(np.float32),
+            "B": rng.randn(16, 24).astype(np.float32)}
+
+
+# --------------------------------------------------------------------------
+# TuningDB basics
+# --------------------------------------------------------------------------
+def test_db_record_lookup_roundtrip(tmp_path):
+    db = TuningDB(dir=tmp_path)
+    tilings = {"mm#abc": {"i": 8, "j": 8}}
+    cid = db.record("ir1", "hw1", "pallas", True, tilings=tilings,
+                    measured_s=2e-3, predicted_s=1e-3, rounds=4, calls=2,
+                    source="test", workload="mm")
+    assert len(db) == 1
+    e = db.lookup("ir1", "hw1", "pallas", True)
+    assert e is not None and e.candidate_id == cid
+    assert e.tilings == tilings and e.measured_s == 2e-3
+    assert e.source == "test" and e.workload == "mm" and e.rounds == 4
+    # identity is the full (ir, hw, backend, interpret) tuple
+    assert db.lookup("ir1", "hw1", "pallas", False) is None
+    assert db.lookup("ir1", "hw2", "pallas", True) is None
+    assert db.lookup("other", "hw1", "pallas", True) is None
+    # a fresh handle over the same dir sees the same entry
+    e2 = TuningDB(dir=tmp_path).lookup("ir1", "hw1", "pallas", True)
+    assert e2 is not None and e2.candidate_id == cid
+
+
+def test_db_best_candidate_min_wins(tmp_path):
+    db = TuningDB(dir=tmp_path)
+    slow = {"mm#abc": {"i": 4}}
+    fast = {"mm#abc": {"i": 16}}
+    db.record("ir", "hw", "jnp", True, tilings=slow, measured_s=5e-3)
+    db.record("ir", "hw", "jnp", True, tilings=fast, measured_s=1e-3)
+    assert db.lookup("ir", "hw", "jnp", True).tilings == fast
+    # re-measuring an existing candidate keeps the minimum
+    db.record("ir", "hw", "jnp", True, tilings=fast, measured_s=9e-3)
+    e = db.lookup("ir", "hw", "jnp", True)
+    assert e.tilings == fast and e.measured_s == 1e-3
+    # a new measurement below the floor takes over
+    db.record("ir", "hw", "jnp", True, tilings=slow, measured_s=5e-4)
+    assert db.lookup("ir", "hw", "jnp", True).tilings == slow
+
+
+def test_db_freshness_bound(tmp_path):
+    db = TuningDB(dir=tmp_path)
+    db.record("ir", "hw", "jnp", True, tilings={"b#x": {"i": 4}},
+              measured_s=1e-3)
+    assert db.lookup("ir", "hw", "jnp", True, max_age_s=3600) is not None
+    # everything is staler than a negative bound
+    assert db.lookup("ir", "hw", "jnp", True, max_age_s=-1.0) is None
+    # the DB-level default applies when the call doesn't override
+    stale_db = TuningDB(dir=tmp_path, max_age_s=-1.0)
+    assert stale_db.lookup("ir", "hw", "jnp", True) is None
+    assert stale_db.lookup("ir", "hw", "jnp", True, max_age_s=3600) is not None
+
+
+# --------------------------------------------------------------------------
+# TuningDB concurrency + durability
+# --------------------------------------------------------------------------
+def test_db_thread_concurrency_no_lost_entries(tmp_path):
+    db = TuningDB(dir=tmp_path)
+    n = 8
+
+    def worker(i):
+        db.record("ir", "hw", "jnp", True,
+                  tilings={"b#x": {"i": i + 1}}, measured_s=float(i + 1),
+                  source=f"thread{i}")
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    entry = db.entries()[entry_key("ir", "hw", "jnp", True)]
+    assert len(entry["candidates"]) == n, "concurrent records must not lose"
+    assert db.lookup("ir", "hw", "jnp", True).measured_s == 1.0
+
+
+def _record_in_subprocess(args):
+    # module-level so the fork-spawned pool can pickle it
+    d, i = args
+    db = TuningDB(dir=d)
+    db.record("ir", "hw", "jnp", True,
+              tilings={"b#x": {"i": i + 1}}, measured_s=float(i + 1),
+              source=f"proc{i}")
+    return i
+
+
+def test_db_process_concurrency_no_lost_entries(tmp_path):
+    n = 8
+    ctx = multiprocessing.get_context("fork")
+    with ctx.Pool(4) as pool:
+        done = pool.map(_record_in_subprocess, [(str(tmp_path), i)
+                                                for i in range(n)])
+    assert sorted(done) == list(range(n))
+    entry = TuningDB(dir=tmp_path).entries()[entry_key("ir", "hw", "jnp", True)]
+    assert len(entry["candidates"]) == n, "cross-process records must not lose"
+
+
+def test_db_torn_write_recovered(tmp_path):
+    db = TuningDB(dir=tmp_path)
+    with faults.inject(faults.fail_nth("cache.disk_write_torn", 1)):
+        db.record("ir", "hw", "jnp", True, tilings={"b#x": {"i": 4}},
+                  measured_s=1e-3)
+    assert db.write_errors == 1
+    # the torn document landed at the final path
+    with pytest.raises(json.JSONDecodeError):
+        json.loads((tmp_path / "tuning_db.json").read_text())
+    # a fresh handle recovers (moves the wreck aside) instead of raising
+    db2 = TuningDB(dir=tmp_path)
+    assert len(db2) == 0 and db2.recovered == 1
+    assert (tmp_path / "tuning_db.corrupt").exists()
+    # and the DB is immediately writable again
+    db2.record("ir", "hw", "jnp", True, tilings={"b#x": {"i": 4}},
+               measured_s=1e-3)
+    assert db2.lookup("ir", "hw", "jnp", True).measured_s == 1e-3
+
+
+def test_corrupt_db_never_fails_the_compile(tmp_path):
+    (tmp_path / "tuning_db.json").write_text("{definitely not json")
+    db = TuningDB(dir=tmp_path)
+    cache = CompilationCache(disk_dir=tmp_path)
+    c = api.stripe_jit(_mm(), get_config("cpu_test"), cache=cache, tune=db)
+    assert c.record.decision_source == "analytic"
+    assert db.recovered >= 1
+    out = c(_mm_arrays())["O"]
+    assert out.shape == (32, 24)
+
+
+# --------------------------------------------------------------------------
+# driver integration: tuned replay
+# --------------------------------------------------------------------------
+def test_stripe_jit_tuned_replay(tmp_path):
+    hw = get_config("cpu_test")
+    cache = CompilationCache(disk_dir=tmp_path)
+    db = TuningDB(dir=tmp_path)
+    c1 = api.stripe_jit(_mm(), hw, cache=cache, tune=db)
+    assert c1.record.decision_source == "analytic" and not c1.record.tuned
+    assert cache.stats.tuned_misses == 1 and cache.stats.tuned_hits == 0
+    # record a measured winner with a deliberately different tiling
+    alt = {k: {v: max(1, t // 2) for v, t in tiles.items()}
+           for k, tiles in c1.record.tilings.items()}
+    assert alt != c1.record.tilings
+    cid = db.record(c1.record.ir_fingerprint, c1.record.hw_fingerprint,
+                    "jnp", True, tilings=alt, measured_s=1e-4,
+                    predicted_s=2e-4, rounds=4, source="test")
+    # a fresh cache instance over the same disk dir = a new process
+    cache2 = CompilationCache(disk_dir=tmp_path)
+    c2 = api.stripe_jit(_mm(), hw, cache=cache2, tune=db)
+    assert c2.record.decision_source == "tuned"
+    assert c2.record.tuned["candidate_id"] == cid
+    assert c2.record.tuned["source"] == "test"
+    assert c2.record.tilings == alt, "replay must compile the measured tiling"
+    assert cache2.stats.tuned_hits == 1
+    # different tiling, same math
+    arrays = _mm_arrays()
+    np.testing.assert_allclose(np.asarray(c1(arrays)["O"]),
+                               np.asarray(c2(arrays)["O"]),
+                               rtol=1e-5, atol=1e-5)
+    # second compile in the same process: memory hit under the tuned key
+    c3 = api.stripe_jit(_mm(), hw, cache=cache2, tune=db)
+    assert c3.record.cache_hit and c3.record.decision_source == "tuned"
+    assert cache2.stats.tuned_hits == 2
+
+
+def test_compile_with_tilings_fixed_replay():
+    hw = get_config("cpu_test")
+    c1 = api.stripe_jit(_mm(), hw, use_disk=False)
+    alt = {k: {v: max(1, t // 2) for v, t in tiles.items()}
+           for k, tiles in c1.record.tilings.items()}
+    c2 = api.compile_with_tilings(_mm(), hw, alt, backend="jnp")
+    assert c2.record.decision_source == "replay"
+    assert c2.record.tilings == alt
+    arrays = _mm_arrays()
+    np.testing.assert_allclose(np.asarray(c1(arrays)["O"]),
+                               np.asarray(c2(arrays)["O"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# measure mode (explore integration)
+# --------------------------------------------------------------------------
+def test_measure_interleaved_min_of_rounds():
+    calls = {"a": 0, "b": 0}
+
+    def mk(name):
+        def thunk():
+            calls[name] += 1
+        return thunk
+
+    ms = measure_interleaved({"a": mk("a"), "b": mk("b")}, rounds=3, calls=2,
+                             warmup=1)
+    assert set(ms) == {"a", "b"}
+    for m in ms.values():
+        assert m.rounds == 3 and m.calls == 2
+        assert m.min_s == min(m.all_rounds_s) > 0
+    # warmup + rounds * calls per thunk
+    assert calls == {"a": 7, "b": 7}
+
+
+def test_measure_candidates_populates_db(tmp_path):
+    from repro.explore import Axis, SearchSpace
+
+    sp = SearchSpace(
+        name="tiny-cpu", base="cpu_test",
+        axes=(Axis("mem.RAM.bandwidth", (50e9, 200e9), default=50e9),))
+    db = TuningDB(dir=tmp_path)
+    sweep = api.run_sweep(sp, "fig4_conv", budget=2, strategy="grid",
+                          cache_dir=str(tmp_path / "cache"), measure=3,
+                          tune_db=db)
+    ms = sweep.measurement
+    assert ms is not None and ms["backend"] == "pallas" and ms["interpret"]
+    wl = ms["workloads"]["fig4_conv"]
+    assert not wl.get("error")
+    assert wl["n_candidates"] >= 2
+    assert wl["best_s"] <= wl["analytic_s"], \
+        "the analytic tiling is candidate 0, so the min can't lose to it"
+    assert len(db) == 1
+    e = next(iter(db.entries().values()))
+    assert e["backend"] == "pallas" and e["workload"] == "fig4_conv"
+    assert len(e["candidates"]) == wl["n_candidates"]
+    assert e["best"] == wl["best_candidate"]
+    # the recorded winner replays through the tuned compile path
+    hw = sp.base_config()
+    c = api.stripe_jit(api.get_workloads("fig4_conv")[0].build(), hw,
+                       backend="pallas", interpret=True,
+                       cache=CompilationCache(disk_dir=tmp_path / "cache"),
+                       tune=db)
+    assert c.record.decision_source == "tuned"
+    assert c.record.tuned["candidate_id"] == wl["best_candidate"]
+
+
+# --------------------------------------------------------------------------
+# calibration
+# --------------------------------------------------------------------------
+def test_fit_calibration_irls_recovers_scales_despite_outliers():
+    rng = np.random.RandomState(0)
+    rows = []
+    for _ in range(40):
+        tm = float(rng.uniform(1e-5, 1e-3))
+        tc = float(rng.uniform(1e-5, 1e-3))
+        rows.append({"t_mem_raw": tm, "t_compute_raw": tc,
+                     "predicted_s": tm + tc,
+                     "measured_s": 3.0 * tm + 5.0 * tc + 2e-6})
+    for _ in range(5):  # gross outlier dispatches (GC pause, etc.)
+        tm = float(rng.uniform(1e-5, 1e-3))
+        tc = float(rng.uniform(1e-5, 1e-3))
+        rows.append({"t_mem_raw": tm, "t_compute_raw": tc,
+                     "predicted_s": tm + tc, "measured_s": 0.5})
+    cal = fit_calibration(rows, "hwfp", "jnp")
+    assert cal is not None and cal.method == "irls"
+    assert cal.hw_fingerprint == "hwfp" and cal.backend == "jnp"
+    assert cal.scale_mem == pytest.approx(3.0, rel=0.05)
+    assert cal.scale_compute == pytest.approx(5.0, rel=0.05)
+    assert 0.0 <= cal.overhead_s < 1e-4
+
+
+def test_fit_calibration_gmean_fallback_without_terms():
+    rows = [{"predicted_s": 1e-4, "measured_s": 4e-4} for _ in range(10)]
+    cal = fit_calibration(rows, "hwfp", "jnp")
+    assert cal is not None and cal.method == "gmean"
+    assert cal.scale_mem == pytest.approx(4.0, rel=1e-6)
+    assert cal.scale_compute == pytest.approx(4.0, rel=1e-6)
+    assert fit_calibration([], "hwfp") is None
+
+
+def test_calibration_applied_by_evaluate_tiling():
+    hw = get_config("cpu_test")
+    prog = _mm()
+    blk = prog.entry.stmts[0]
+    params = dict(dict(hw.passes)["autotile"])
+    tiles = {"i": 8, "j": 8}
+    base = api.evaluate_tiling(blk, tiles, hw, params)
+    clear_calibrations()
+    try:
+        set_calibration(Calibration(hw_fingerprint=hw.fingerprint(),
+                                    scale_mem=10.0, scale_compute=10.0,
+                                    method="test"))
+        cal = api.evaluate_tiling(blk, tiles, hw, params)
+    finally:
+        clear_calibrations()
+    # .cost is the paper's cache-line metric; calibration scales the
+    # roofline terms and the latency the sweeps rank on
+    assert cal.calibrated and not base.calibrated
+    assert cal.t_mem == pytest.approx(10 * base.t_mem)
+    assert cal.t_compute == pytest.approx(10 * base.t_compute)
+    assert cal.latency_s == pytest.approx(10 * base.latency_s)
+    assert cal.t_mem_raw == base.t_mem_raw, "raw terms stay uncalibrated"
+
+
+def test_calibration_rekeys_the_compile_cache(tmp_path):
+    hw = get_config("cpu_test")
+    cache = CompilationCache(disk_dir=tmp_path)
+    c1 = api.stripe_jit(_mm(), hw, cache=cache)
+    clear_calibrations()
+    try:
+        set_calibration(Calibration(hw_fingerprint=hw.fingerprint(),
+                                    scale_mem=2.0, scale_compute=2.0,
+                                    method="test"))
+        c2 = api.stripe_jit(_mm(), hw, cache=cache)
+    finally:
+        clear_calibrations()
+    assert c2.record.key != c1.record.key
+    assert not c2.record.cache_hit, \
+        "calibrated compiles must never collide with uncalibrated ones"
+    c3 = api.stripe_jit(_mm(), hw, cache=cache)
+    assert c3.record.cache_hit and c3.record.key == c1.record.key
+
+
+def test_calibration_save_load_roundtrip(tmp_path):
+    cal = Calibration(hw_fingerprint="hwfp", scale_mem=2.5,
+                      scale_compute=0.5, overhead_s=1e-6, n_pairs=12,
+                      method="irls", backend="jnp")
+    assert save_calibrations(tmp_path, cals=[cal]) is not None
+    clear_calibrations()
+    try:
+        loaded = load_calibrations(tmp_path)
+        assert len(loaded) == 1
+        assert loaded[0].fingerprint() == cal.fingerprint()
+        from repro.tune import get_calibration
+        assert get_calibration("hwfp").scale_mem == 2.5
+    finally:
+        clear_calibrations()
+    assert load_calibrations(tmp_path / "missing") == []
+
+
+# --------------------------------------------------------------------------
+# residual-log rotation (satellite: bounded growth)
+# --------------------------------------------------------------------------
+def test_residual_log_rotation_folds_into_db(tmp_path):
+    path = tmp_path / "residuals.jsonl"
+    rows = [{"backend": "jnp", "hw_fingerprint": "h", "interpret": True,
+             "predicted_s": 1e-4, "measured_s": 2e-4} for _ in range(10)]
+    append_residuals(rows, path=path, cap=6)
+    live = read_residuals(path)
+    assert len(live) == 3, "rotation keeps the newest cap//2 rows"
+    db = TuningDB(dir=tmp_path)
+    folded = db.residual_summaries()
+    assert sum(s["rows"] for s in folded) == 7
+    summary = summarize_residuals(live, folded=folded)
+    assert summary["rows"] == 10
+    assert summary["live_rows"] == 3 and summary["folded_rows"] == 7
+    assert summary["pairs_with_prediction"] == 10
+    # the merged gmean covers the full history, not just the log tail
+    assert summary["measured_over_predicted_gmean"] == pytest.approx(2.0)
+    assert summary["by_backend"]["jnp"] == 10
+    # a second burst keeps folding additively
+    append_residuals(rows, path=path, cap=6)
+    assert sum(s["rows"] for s in TuningDB(dir=tmp_path).residual_summaries()) \
+        == 17
+
+
+def test_residual_cap_disabled_keeps_everything(tmp_path):
+    path = tmp_path / "residuals.jsonl"
+    rows = [{"backend": "jnp", "predicted_s": 1e-4, "measured_s": 2e-4}
+            for _ in range(30)]
+    append_residuals(rows, path=path, cap=0)
+    assert len(read_residuals(path)) == 30
+    assert not (tmp_path / "tuning_db.json").exists()
+
+
+# --------------------------------------------------------------------------
+# serving-engine opt-in (EngineConfig.tune)
+# --------------------------------------------------------------------------
+def _tiny_engine_model():
+    cfg = configs.get("llama3-8b").scaled(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+        vocab=64, head_dim=16, vocab_pad_multiple=16)
+    return cfg, build_model(cfg)
+
+
+def test_engine_tune_consults_and_replays(tmp_path):
+    cfg, model = _tiny_engine_model()
+    params = model.init(jax.random.PRNGKey(0))
+    ec = api.EngineConfig(slots=2, max_len=32, page_size=8, tune=True)
+
+    def run_one(engine):
+        engine.submit(api.Request(
+            uid=0, prompt=np.arange(1, 5, dtype=np.int32),
+            sampling=api.SamplingParams(max_new_tokens=4)))
+        return {r.uid: r.out_tokens for r in engine.run(params, max_steps=500)}
+
+    cache1 = CompilationCache(disk_dir=tmp_path)
+    eng1 = api.ServingEngine(model, ec, compile_cache=cache1)
+    out1 = run_one(eng1)
+    assert cache1.stats.tuned_misses > 0 and cache1.stats.tuned_hits == 0
+    assert not [e for e in eng1.events() if e["event"] == "tuned_replay"]
+
+    # feed the DB next to the cache from the engine's own compile records
+    db = TuningDB(dir=tmp_path)
+    for name, rec in eng1.compile_records().items():
+        assert rec.ir_fingerprint, name
+        db.record(rec.ir_fingerprint, rec.hw_fingerprint, ec.backend,
+                  ec.interpret, tilings=rec.tilings,
+                  block_backends=rec.block_backends, measured_s=1e-4,
+                  source="test", workload=name)
+    assert len(db) > 0
+
+    # a second engine (fresh cache instance = new process) replays tuned
+    cache2 = CompilationCache(disk_dir=tmp_path)
+    eng2 = api.ServingEngine(model, ec, compile_cache=cache2)
+    out2 = run_one(eng2)
+    assert out2 == out1, "tuned replay must not change tokens"
+    assert cache2.stats.tuned_hits > 0
+    events = [e for e in eng2.events() if e["event"] == "tuned_replay"]
+    assert events, "tuned bucket compiles must announce themselves"
+    for e in events:
+        assert e["candidate"] and e["source"] == "test"
+        assert e["measured_s"] == 1e-4
+
+
+def test_engine_tune_off_never_touches_the_db(tmp_path):
+    cfg, model = _tiny_engine_model()
+    params = model.init(jax.random.PRNGKey(0))
+    cache = CompilationCache(disk_dir=tmp_path)
+    eng = api.ServingEngine(
+        model, api.EngineConfig(slots=2, max_len=32, page_size=8),
+        compile_cache=cache)
+    eng.submit(api.Request(uid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                           sampling=api.SamplingParams(max_new_tokens=4)))
+    eng.run(params, max_steps=500)
+    assert cache.stats.tuned_hits == 0 and cache.stats.tuned_misses == 0
+    assert not (tmp_path / "tuning_db.json").exists()
