@@ -909,6 +909,138 @@ def bench_autotune() -> None:
             clear_calibrations()
 
 
+def bench_distributed() -> None:
+    """Multi-device smoke on 8 emulated host devices (subprocess — this
+    process's jax is already initialized single-device): the acceptance
+    FFN through ``stripe_jit(mesh=8)`` vs the *replicated* placement on
+    the same mesh (every device computes the full program — the
+    no-partitioning baseline; emulated devices share the host cores, so
+    the wall-clock ratio measures the partition's per-device work
+    reduction, not physical parallelism), plus the predicted-vs-emitted
+    collective loop on a reduction-split matmul (psum count and modelled
+    bytes asserted in the child).  A plain single-device row is emitted
+    as the absolute reference."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    script = textwrap.dedent("""
+        import json, time
+        import jax
+        import numpy as np
+        if jax.device_count() < 8:
+            print(json.dumps({"skip": f"only {jax.device_count()} device(s)"}))
+            raise SystemExit(0)
+        from repro import api
+        from repro.core import mesh_lower
+        from repro.core.cost import collective_seconds
+        from repro.core.frontend import TileProgram
+        from repro.core.hwconfig import CPU_TEST
+
+        def ffn(m, k, n):
+            tp = TileProgram("ffn")
+            tp.input("X", (m, k), "float32")
+            tp.input("W", (k, n), "float32")
+            tp.input("B", (n,), "float32")
+            tp.output("O", (m, n), "float32")
+            tp.temp("T", (m, n), "float32")
+            tp.temp("U", (m, n), "float32")
+            tp.op("T[i, j] += X[i, c] * W[c, j]", name="mm")
+            tp.op("U[i, j] = T[i, j] + B[j]", name="bias")
+            tp.op("O[i, j] = gelu(U[i, j])", name="act")
+            return tp.build()
+
+        m, k, n = 2048, 512, 512
+        rng = np.random.default_rng(0)
+        arrays = {"X": rng.normal(size=(m, k)).astype("float32"),
+                  "W": rng.normal(size=(k, n)).astype("float32"),
+                  "B": rng.normal(size=(n,)).astype("float32")}
+        single = api.jit(ffn(m, k, n), CPU_TEST, backend="jnp")
+        sh = api.jit(ffn(m, k, n), CPU_TEST, backend="jnp", mesh=8)
+
+        # replicated placement on the same mesh: every device runs the
+        # full single-device program (in_specs/out_specs all P())
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+        jmesh = Mesh(np.array(jax.devices()[:8]), ("x",))
+        inner = api.jit(ffn(m, k, n), CPU_TEST, backend="jnp", jit=False)
+        in_order = ["X", "W", "B"]
+        rep_body = shard_map(
+            lambda X, W, B: inner({"X": X, "W": W, "B": B})["O"],
+            mesh=jmesh, in_specs=(P(), P(), P()), out_specs=P(),
+            check_rep=False)
+        rep_jit = jax.jit(rep_body)
+        rep = lambda a: {"O": rep_jit(*[a[k] for k in in_order])}
+
+        r0, s0, g0 = rep(arrays), sh(arrays), single(arrays)
+        np.testing.assert_allclose(np.asarray(s0["O"]), np.asarray(g0["O"]),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(r0["O"]), np.asarray(g0["O"]),
+                                   rtol=1e-4, atol=1e-4)
+
+        def best_us(fn, rounds=5):
+            best = float("inf")
+            for _ in range(rounds):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(arrays)["O"])
+                best = min(best, time.perf_counter() - t0)
+            return best * 1e6
+
+        t_single, t_rep, t_sh = best_us(single), best_us(rep), best_us(sh)
+
+        # predicted-vs-emitted collective loop: reduction-split matmul
+        tp = TileProgram("kred")
+        tp.input("X", (12, 4096), "float32")
+        tp.input("W", (4096, 20), "float32")
+        tp.output("O", (12, 20), "float32")
+        tp.op("O[i, j] += X[i, c] * W[c, j]", name="mm")
+        kr = api.jit(tp.build(), CPU_TEST, backend="jnp", mesh=8)
+        karr = {"X": rng.normal(size=(12, 4096)).astype("float32"),
+                "W": rng.normal(size=(4096, 20)).astype("float32")}
+        counts = mesh_lower.count_collectives(kr._fn, karr)
+        assert counts.get("psum") == 1, counts
+        pred = kr.record.mesh["collective_bytes"]
+        want = collective_seconds("psum", 12 * 20 * 4, 8, 1.0)
+        assert abs(pred - want) < 1e-6, (pred, want)
+        np.testing.assert_allclose(
+            np.asarray(kr(karr)["O"]),
+            np.asarray(karr["X"] @ karr["W"]), rtol=1e-3, atol=1e-3)
+
+        print(json.dumps({
+            "devices": jax.device_count(),
+            "single_us": t_single,
+            "replicated_us": t_rep, "sharded_us": t_sh,
+            "speedup": t_rep / t_sh,
+            "ffn_collective_bytes": sh.record.mesh["collective_bytes"],
+            "kred_psum_count": counts["psum"],
+            "kred_collective_bytes": pred,
+        }))
+    """)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"distributed bench failed:\n{out.stdout}\n{out.stderr}"
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    if "skip" in res:
+        emit("distributed_skipped", 0.0, f"\"{res['skip']}\"")
+        return
+    emit("distributed_devices", 0.0, res["devices"])
+    emit("distributed_ffn_single_device", res["single_us"], "")
+    emit("distributed_ffn_replicated_mesh8", res["replicated_us"], "")
+    emit("distributed_ffn_sharded_mesh8", res["sharded_us"],
+         f"{res['speedup']:.2f}x")
+    assert res["speedup"] > 1.0, \
+        f"sharded must beat the replicated placement ({res['speedup']:.2f}x)"
+    emit("distributed_ffn_collective_bytes", 0.0,
+         int(res["ffn_collective_bytes"]))
+    emit("distributed_kred_psum_emitted_vs_predicted", 0.0,
+         f"\"psum={res['kred_psum_count']} bytes={int(res['kred_collective_bytes'])}\"")
+
+
 BENCHES = {
     "fig1": bench_fig1_engineering_effort,
     "fig4": bench_fig4_autotile,
@@ -918,6 +1050,7 @@ BENCHES = {
     "memplan": bench_memplan,
     "conv": bench_conv,
     "explore": bench_explore,
+    "distributed": bench_distributed,
     "autotune": bench_autotune,
     "serving": bench_serving,
     "chaos": bench_chaos,

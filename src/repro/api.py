@@ -83,6 +83,9 @@ from .tune import (
     measure_interleaved,
     set_calibration,
 )
+# Multi-device: ``api.jit(..., mesh=)`` accepts a device count, a mesh
+# shape tuple, or an ``api.Mesh`` (= ``jax.sharding.Mesh``).
+from jax.sharding import Mesh
 
 # The two headline verbs, under their public names.
 jit = stripe_jit
@@ -95,7 +98,7 @@ __all__ = [
     "validate_program", "lower_program_jnp", "compile_program", "get_pass",
     "split_block", "choose_tiling", "evaluate_tiling", "score_pass_trace",
     # configs
-    "get_config", "HW_REGISTRY", "HardwareConfig", "configs",
+    "get_config", "HW_REGISTRY", "HardwareConfig", "configs", "Mesh",
     "build_model", "make_batch",
     # caching
     "CompilationCache", "get_default_cache", "set_default_cache",

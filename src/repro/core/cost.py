@@ -485,6 +485,51 @@ def fusion_vmem_pressure(refs, ranges: Mapping[str, int], hw: HardwareConfig,
 
 
 # --------------------------------------------------------------------------
+# Interconnect model (multi-device lowering, core.shardplan / mesh_lower)
+# --------------------------------------------------------------------------
+# Fallback link bandwidth when a config models no interconnect
+# (ici_link_bw == 0): a conservative PCIe-ish number so mesh plans on
+# such configs still get finite, comparable communication costs instead
+# of dividing by zero.
+DEFAULT_LINK_BW = 16e9
+# Fixed per-step cost of one ring-overlap stage (ppermute launch + loop
+# bookkeeping).  A ring that cannot hide at least this much per step is
+# not worth its n extra kernel launches and stays a plain psum.
+RING_STEP_OVERHEAD_S = 5e-6
+
+
+def link_bandwidth(hw: HardwareConfig, mesh_shape: Tuple[int, ...] = ()) -> float:
+    """Effective per-device interconnect bandwidth for ring collectives
+    on ``mesh_shape``.  Each mesh axis of a torus contributes an
+    independent link pair, so a 2-D mesh moves ring traffic twice as
+    fast as a flat ring over the same chips — this is how the mesh
+    *shape* (not just its size) enters the cost model."""
+    bw = hw.ici_link_bw or DEFAULT_LINK_BW
+    axes = len([s for s in mesh_shape if int(s) > 1]) or 1
+    return bw * axes
+
+
+def collective_seconds(op: str, nbytes: float, n: int, bw: float) -> float:
+    """Per-device time of one ring collective moving ``nbytes`` of
+    *global* payload over ``n`` devices at link bandwidth ``bw``.
+
+    Ring formulas (per device): all-gather and reduce-scatter each move
+    ``(n-1)/n`` of the full payload; an all-reduce (psum) is
+    reduce-scatter + all-gather, ``2(n-1)/n``; a halo exchange moves
+    exactly its margin bytes (``nbytes`` is already the margin)."""
+    n = max(int(n), 1)
+    if n <= 1 or nbytes <= 0:
+        return 0.0
+    if op in ("all_gather", "reduce_scatter", "slice"):
+        frac = (n - 1) / n
+    elif op in ("psum", "ring_matmul"):
+        frac = 2 * (n - 1) / n
+    else:  # halo: nbytes is the exchanged margin itself
+        frac = 1.0
+    return frac * float(nbytes) / max(bw, 1.0)
+
+
+# --------------------------------------------------------------------------
 # Whole-program analytic scoring (design-space exploration, repro.explore)
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -507,6 +552,11 @@ class ProgramScore:
     n_kernels: int = 0           # fusion groups = dispatch units
     n_blocks: int = 0
     n_levels: int = 0            # wavefront levels the schedule found
+    # interconnect terms (partition pass's shard plan; zero on
+    # single-device compiles)
+    comm_bytes: float = 0.0      # predicted per-device collective bytes
+    comm_s: float = 0.0          # total collective time (incl. hidden)
+    n_collectives: int = 0
     per_block: List[Dict] = dataclasses.field(default_factory=list)
 
     def to_json(self) -> Dict:
@@ -530,13 +580,49 @@ def score_pass_trace(trace, n_kernels: int = 0) -> ProgramScore:
     score = ProgramScore(n_kernels=n_kernels)
     recs: List[Dict] = []
     levels: Dict[str, int] = {}
+    splits: Dict[str, int] = {}      # semantic block -> mesh devices
+    comm_exposed = 0.0               # collective time not hidden by compute
+
+    def split_of(block: str) -> int:
+        """Shard factor for an autotile rec's block, matching the
+        partition pass's semantic names against post-fuse/post-tile
+        names (anchor, anchor.sub, or a+b fusion-group names)."""
+        for b, k in splits.items():
+            if block == b or block.startswith(b + ".") or b in block.split("+"):
+                return k
+        return 1
+
     for entry in trace or ():
         name = entry[0]
         report = entry[2] if len(entry) > 2 else []
-        if name == "autotile":
+        if name == "partition":
+            # shard-plan annotations: split records scale per-device
+            # compute; collective records price the interconnect.  The
+            # driver's mesh path appends pre-scaled traces (segments are
+            # already local-sized) and emits no split records.
+            for rec in report:
+                if not isinstance(rec, dict):
+                    continue
+                if "split" in rec and "block" in rec and rec.get("n"):
+                    splits[str(rec["block"])] = max(int(rec["n"]), 1)
+                if "collective" in rec:
+                    t = float(rec.get("t_comm_s", 0.0))
+                    hidden = float(rec.get("t_hidden_s", 0.0)) if rec.get("overlap") else 0.0
+                    score.comm_bytes += float(rec.get("bytes", 0.0))
+                    score.comm_s += t
+                    score.n_collectives += 1
+                    comm_exposed += max(t - hidden, 0.0)
+        elif name == "autotile":
             for rec in report:
                 if not isinstance(rec, dict) or "t_mem" not in rec:
                     continue
+                k = split_of(str(rec.get("block", "")))
+                if k > 1:
+                    rec = dict(rec)
+                    for f in ("t_mem", "t_compute", "latency_s", "bytes_hbm",
+                              "macs", "t_mem_raw", "t_compute_raw"):
+                        if f in rec and rec[f] is not None:
+                            rec[f] = rec[f] / k
                 recs.append(rec)
                 score.bytes_hbm += rec.get("bytes_hbm", 0.0)
                 score.flops += 2.0 * rec.get("macs", 0.0)
@@ -584,7 +670,11 @@ def score_pass_trace(trace, n_kernels: int = 0) -> ProgramScore:
                                max(block_latency(r) for r in group))
     for rec in serial:
         score.latency_s += block_latency(rec)
-    score.latency_serial_s = sum(block_latency(r) for r in recs)
+    # collective time the overlap decisions could not hide serializes
+    # after the wavefront (ring-overlapped collectives contribute only
+    # their exposed remainder)
+    score.latency_s += comm_exposed
+    score.latency_serial_s = sum(block_latency(r) for r in recs) + comm_exposed
     score.n_levels = len(by_level)
     return score
 

@@ -39,6 +39,13 @@ class HardwareConfig:
     peak_flops: float = 0.0
     # roofline link terms (framework-level; chips in a pod slice)
     ici_link_bw: float = 0.0
+    # device-mesh shape for multi-device plans: () = single device.  A
+    # non-trivial mesh activates the partition pass's annotation mode
+    # (shard-plan analysis + collective predictions in the pass trace)
+    # and the interconnect terms of the cost model; the backend mesh a
+    # ``stripe_jit(..., mesh=)`` compile runs on is resolved separately
+    # (the config's mesh is the *model*, the driver's mesh the machine).
+    mesh: Tuple[int, ...] = ()
     # grid-pipeline depth: how many in-flight tile buffers the hardware's
     # DMA pipeline holds per streamed view (2 = classic double buffering;
     # 1 = no overlap — fetch and compute serialize).  Gates the pipelined
@@ -82,6 +89,7 @@ class HardwareConfig:
             [[m.name, m.size_bytes, m.bandwidth, m.cache_line_elems] for m in self.mem_units],
             [[s.name, list(s.dims), s.flops] for s in self.stencils],
             self.peak_flops, self.ici_link_bw, self.pipeline_depth,
+            list(self.mesh),
             [[name, sorted(params.items())] for name, params in self.passes],
         ])
         object.__setattr__(self, "_fingerprint_memo", fp)
@@ -132,6 +140,31 @@ class HardwareConfig:
         """Drop one pass from the pipeline (pipeline-variant sweeps)."""
         return dataclasses.replace(
             self, passes=tuple(p for p in self.passes if p[0] != name))
+
+    def with_mesh(self, shape: Sequence[int]) -> "HardwareConfig":
+        """Set the modeled device-mesh shape (mesh-shape sweeps).  The
+        partition pass must see the *semantic* program, so it is
+        prepended to the pipeline when a non-trivial mesh is set and the
+        pipeline does not already run it."""
+        shape = tuple(int(s) for s in shape)
+        passes = self.passes
+        n = 1
+        for s in shape:
+            n *= s
+        if n <= 1:
+            # a trivial mesh is *no* mesh: normalize so the config
+            # fingerprints identically to the stock single-device one
+            # (sweep dedupe relies on it)
+            return dataclasses.replace(self, mesh=())
+        if not any(name == "partition" for name, _ in passes):
+            passes = (("partition", {}),) + passes
+        return dataclasses.replace(self, mesh=shape, passes=passes)
+
+    def mesh_devices(self) -> int:
+        n = 1
+        for s in self.mesh:
+            n *= int(s)
+        return n
 
 
 # ---------------------------------------------------------------------------

@@ -482,7 +482,11 @@ def _materialize_group(anchor: Block, members: List[_Member],
     base = members_of(anchor)
     names = [m.block.name.split(".")[0] for m in members]
     f.name = "+".join([anchor.name] + names)
-    f.tags = {"contraction", "fused"}
+    # partition annotations ride along so the mesh split decision stays
+    # visible on the fused block
+    f.tags = {"contraction", "fused"} | {
+        t for m in [anchor] + [m.block for m in members]
+        for t in m.tags if t == "partitioned" or t.startswith("partition:")}
     _set_members(f, base + names)
 
     acc_name = None

@@ -37,11 +37,49 @@ def partition_block(block: Block, n_units: int, unit: str = "core") -> Block:
     return outer
 
 
+def _annotate_mesh(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
+    """Mesh-annotation mode: the config carries a device mesh
+    (``hw.with_mesh``), so run the shard planner and record its split /
+    collective decisions into the pass report — ``cost.score_pass_trace``
+    scales the per-block roofline by the split factor and charges the
+    exposed communication time, which is how an ``explore`` sweep over
+    mesh shapes scores points without touching any devices.  The blocks
+    are tagged but **not** restructured (the driver's mesh path does the
+    actual segment cutting at lowering time); a program the planner
+    cannot shard reports the reason and passes through unchanged."""
+    n = hw.mesh_devices()
+    if n <= 1:
+        return prog
+    from ..shardplan import UnsupportedMesh, plan_program
+
+    report = params.get("_report")
+    try:
+        plan = plan_program(prog.source or prog, n, hw, hw.mesh)
+    except UnsupportedMesh as e:
+        if report is not None:
+            report.append({"mesh": list(hw.mesh), "fallback": str(e)})
+        return prog
+    splits = plan.splits()
+    for s in prog.entry.stmts:
+        if not isinstance(s, Block):
+            continue
+        for member in s.name.split("+"):
+            base = member.split(".")[0]
+            hit = splits.get(member) or splits.get(base) or splits.get(s.name)
+            if hit:
+                s.add_tag("partitioned")
+                s.add_tag(f"partition:{hit}:{n}")
+                break
+    if report is not None:
+        report.extend(plan.report(scale_compute=True))
+    return prog
+
+
 @register("partition")
 def partition_pass(prog: Program, hw: HardwareConfig, params: Mapping) -> Program:
     n_units = params.get("n_units", 1)
     if n_units <= 1:
-        return prog
+        return _annotate_mesh(prog, hw, params)
     new_stmts = []
     for s in prog.entry.stmts:
         if isinstance(s, Block) and "contraction" in s.tags and "grid" not in s.tags and "partitioned" not in s.tags:

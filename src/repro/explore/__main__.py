@@ -19,14 +19,30 @@ import sys
 
 from .report import to_markdown, write_report
 from .runner import run_sweep
-from .space import BUILTIN_SPACES, get_space
+from .space import BUILTIN_SPACES, _fmt, get_space
 from .workloads import CORPORA
+
+
+def _space_epilog() -> str:
+    """--help epilog enumerating every built-in space's axes (so the
+    sweepable knobs — including the device-mesh shapes of `mesh-sweep` —
+    are discoverable without reading the source)."""
+    lines = ["built-in spaces and their axes:"]
+    for name in sorted(BUILTIN_SPACES):
+        sp = BUILTIN_SPACES[name]()
+        lines.append(f"  {name} (base {sp.base}):")
+        for a in sp.axes:
+            vals = ", ".join(_fmt(v) for v in a.values)
+            lines.append(f"    {a.path} = {{{vals}}} (default {_fmt(a.default)})")
+    return "\n".join(lines)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.explore",
-        description=__doc__.splitlines()[0])
+        description=__doc__.splitlines()[0],
+        epilog=_space_epilog(),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--space", default="tpu-sweep",
                     help=f"built-in search space: {sorted(BUILTIN_SPACES)}")
     ap.add_argument("--workloads", default="default",

@@ -1,7 +1,8 @@
 """Pareto-frontier extraction and report emission.
 
-A sweep point is scored on three minimization axes — predicted corpus
-latency, peak VMEM arena pressure, kernels launched — and the report
+A sweep point is scored on four minimization axes — predicted corpus
+latency, peak VMEM arena pressure, kernels launched, per-device
+communication bytes (zero off-mesh) — and the report
 extracts the non-dominated set, compares every point against the stock
 baseline per workload, and emits both machine-readable JSON and a
 markdown table (the CLI prints the latter).
@@ -14,7 +15,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .runner import PointResult, SweepResult
 
-PARETO_AXES = ("latency_s", "vmem_peak_bytes", "n_kernels")
+PARETO_AXES = ("latency_s", "vmem_peak_bytes", "n_kernels", "comm_bytes")
 
 
 def _axes(p: PointResult) -> Tuple[float, ...]:
@@ -101,8 +102,8 @@ def to_markdown(sweep: SweepResult, max_rows: int = 24) -> str:
         f"x {len(sweep.baseline.scores)} workloads; "
         f"wall {sweep.wall_time_s:.1f}s.",
         "",
-        "| rank | config | pred latency (us) | VMEM peak (B) | kernels | Pareto |",
-        "|---:|---|---:|---:|---:|:---:|",
+        "| rank | config | pred latency (us) | VMEM peak (B) | kernels | comm (B) | Pareto |",
+        "|---:|---|---:|---:|---:|---:|:---:|",
     ]
     rows: List[PointResult] = sorted(sweep.unique_points(), key=lambda p: p.latency_s)
     table = [(sweep.baseline, True)] + [(p, False) for p in rows[:max_rows]]
@@ -112,6 +113,7 @@ def to_markdown(sweep: SweepResult, max_rows: int = 24) -> str:
         lines.append(
             f"| {rank} | {name} | {_fmt_lat(p.latency_s)} | "
             f"{p.vmem_peak_bytes} | {p.n_kernels} | "
+            f"{int(getattr(p, 'comm_bytes', 0) or 0)} | "
             f"{'x' if (not is_base and p.index in front) else ''} |")
     lines.append("")
     lines.append("## Baseline dominance (predicted latency, per workload)")

@@ -48,6 +48,7 @@ class PointResult:
     latency_s: float = 0.0          # sum of per-workload predicted latencies
     vmem_peak_bytes: int = 0        # max across workloads
     n_kernels: int = 0              # sum across workloads (dispatches per corpus pass)
+    comm_bytes: float = 0.0         # sum of per-device collective bytes (mesh axis)
     compile_time_s: float = 0.0
     dedup_of: Optional[int] = None  # earlier point index with the same fingerprint
     error: str = ""
@@ -84,6 +85,7 @@ def _aggregate(res: PointResult, scores: Mapping[str, ProgramScore]) -> None:
     res.latency_s = sum(s.latency_s for s in scores.values())
     res.vmem_peak_bytes = max((s.vmem_peak_bytes for s in scores.values()), default=0)
     res.n_kernels = sum(s.n_kernels for s in scores.values())
+    res.comm_bytes = sum(s.comm_bytes for s in scores.values())
 
 
 def _score_point_task(space: SearchSpace, point: Dict[str, Any], index: int,
@@ -274,7 +276,7 @@ def _run_sweep(space: SearchSpace, workload_spec: str = "default", *,
         # copy only the scored fields: identity (index/point/fingerprint/
         # dedup_of) was fixed by the dedupe pass above
         for f in ("scores", "latency_s", "vmem_peak_bytes", "n_kernels",
-                  "compile_time_s", "error"):
+                  "comm_bytes", "compile_time_s", "error"):
             setattr(res, f, d[f])
     # deduped points reference (and copy the scores of) their original
     # (-1 = the baseline itself)
@@ -285,6 +287,7 @@ def _run_sweep(space: SearchSpace, workload_spec: str = "default", *,
             res.latency_s = orig.latency_s
             res.vmem_peak_bytes = orig.vmem_peak_bytes
             res.n_kernels = orig.n_kernels
+            res.comm_bytes = orig.comm_bytes
             res.error = orig.error
 
     sweep = SweepResult(space=space, workload_spec=workload_spec,

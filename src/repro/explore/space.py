@@ -15,6 +15,10 @@ Axis paths address the config structurally:
   ``stencil.mxu.dims``;
 * ``peak_flops`` / ``ici_link_bw`` / ``pipeline_depth`` — top-level
   roofline/pipeline scalars;
+* ``mesh``                   — a device-mesh shape tuple via
+  ``with_mesh`` (``(1,)`` = single device); the partition pass annotates
+  the shard plan, so sweeping this axis trades predicted latency against
+  the new communication-bytes Pareto axis;
 * ``pipeline``               — a named pass-pipeline variant
   (:data:`PIPELINE_VARIANTS`), e.g. dropping the fusion pass;
 * ``<pass>.<param>``         — a pass parameter via ``with_params``,
@@ -71,6 +75,9 @@ def apply_axis(cfg: HardwareConfig, path: str, value: Any) -> HardwareConfig:
                            f"available: {sorted(PIPELINE_VARIANTS)}") from None
     if path in ("peak_flops", "ici_link_bw", "pipeline_depth"):
         return dataclasses.replace(cfg, **{path: value})
+    if path == "mesh":
+        shape = (value,) if isinstance(value, int) else tuple(value)
+        return cfg.with_mesh(shape)
     if len(parts) == 3 and parts[0] == "mem":
         return cfg.with_mem(parts[1], **{parts[2]: value})
     if len(parts) == 3 and parts[0] == "stencil":
@@ -81,6 +88,8 @@ def apply_axis(cfg: HardwareConfig, path: str, value: Any) -> HardwareConfig:
 
 
 def _fmt(v: Any) -> str:
+    if isinstance(v, (tuple, list)):
+        return "x".join(str(int(s)) for s in v)  # mesh shapes: "2x4"
     if isinstance(v, float):
         return f"{v:g}"
     if isinstance(v, int) and v >= 1 << 20 and v % (1 << 20) == 0:
@@ -241,9 +250,26 @@ def cacheline_sweep() -> SearchSpace:
         ))
 
 
+def mesh_sweep() -> SearchSpace:
+    """Multi-device co-design on the TPU v5e: device-mesh shapes (the
+    partition pass's shard plan prices the collectives analytically — no
+    devices are touched) crossed with interconnect-bandwidth generations
+    and the DMA pipeline depth.  The sweep's Pareto front trades
+    predicted latency against per-device communication bytes."""
+    return SearchSpace(
+        name="mesh-sweep", base="tpu_v5e",
+        axes=(
+            Axis("mesh", ((1,), (2,), (4,), (8,), (2, 2), (2, 4)),
+                 default=(1,)),
+            Axis("ici_link_bw", (50e9, 100e9, 25e9), default=50e9),
+            Axis("pipeline_depth", (2, 1, 3), default=2),
+        ))
+
+
 BUILTIN_SPACES: Dict[str, Callable[[], SearchSpace]] = {
     "tpu-sweep": tpu_sweep,
     "cacheline-sweep": cacheline_sweep,
+    "mesh-sweep": mesh_sweep,
 }
 
 

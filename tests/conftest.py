@@ -12,12 +12,38 @@ shrinking, no database).
 from __future__ import annotations
 
 import functools
+import os
 import random
 import sys
 import types
 import zlib
 
 import pytest
+
+# Multi-device tests run *in process* on emulated host devices: force the
+# device count before jax first initializes (a no-op if something already
+# imported jax — then @pytest.mark.distributed tests skip instead).  An
+# explicit user-provided forcing flag is left alone.
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+if "jax" not in sys.modules and _FORCE_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FORCE_FLAG}=8").strip()
+
+
+def pytest_collection_modifyitems(config, items):
+    if not any(item.get_closest_marker("distributed") for item in items):
+        return
+    import jax
+
+    n = jax.device_count()
+    if n >= 8:
+        return
+    skip = pytest.mark.skip(
+        reason=f"needs 8 jax devices, have {n} (XLA_FLAGS forcing was "
+               "preempted by an earlier jax init)")
+    for item in items:
+        if item.get_closest_marker("distributed"):
+            item.add_marker(skip)
 
 
 @pytest.fixture(autouse=True)
